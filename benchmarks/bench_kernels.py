@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: per-sample-grad-norm kernels vs the materialising
+oracle (interpret mode on CPU — numbers are correctness-path timings; the
+derived column carries the structural FLOP/byte model used for TPU)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.quant import quantize_int8
+
+SHAPES = [
+    (4, 256, 256, 256),
+    (2, 512, 128, 512),
+    (8, 128, 512, 64),
+]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jnp.asarray(out).block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for b, s, di, do in SHAPES:
+        x = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+        d = jnp.asarray(rng.standard_normal((b, s, do)), jnp.float32)
+        t_ref = _time(lambda a, c: ref.psgn_ref(a, c), x, d)
+        t_dir = _time(lambda a, c: ops.persample_sq_norm(a, c, method="direct"), x, d)
+        t_gram = _time(lambda a, c: ops.persample_sq_norm(a, c, method="gram"), x, d)
+        flops_direct = 2 * b * s * di * do
+        flops_gram = 2 * b * s * s * (di + do)
+        # bytes the ORACLE materialises that the kernels never do
+        oracle_bytes = b * di * do * 4
+        rows.append((
+            f"psgn_direct_b{b}s{s}_{di}x{do}", t_dir * 1e6,
+            f"flops={flops_direct:.3g};oracle_materialises={oracle_bytes}B;"
+            f"ref_us={t_ref*1e6:.0f}",
+        ))
+        rows.append((
+            f"psgn_gram_b{b}s{s}_{di}x{do}", t_gram * 1e6,
+            f"flops={flops_gram:.3g};chosen={ops.choose_method(s, di, do)}",
+        ))
+    g = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    t_q = _time(lambda a: quantize_int8(a)[0], g)
+    rows.append((
+        "quant_int8_1024x1024", t_q * 1e6,
+        f"wire_ratio={(1024*1024 + 1024*4)/(1024*1024*4):.3f}",
+    ))
+    return rows

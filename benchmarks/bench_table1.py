@@ -1,0 +1,67 @@
+"""Paper Table 1: validation accuracy at 25/50/75/100% of training + time to
+within ±1% of final accuracy, for SGD(small), SGD(large), AdaBatch, DiveBatch
+on the CIFAR-shaped procedural task (ResNet-GN, CPU-scaled)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import AdaptiveBatchController, make_policy
+from repro.data import imagelike_classification
+from repro.models import resnet
+from repro.optim import sgd
+from repro.train.loop import ModelFns, Trainer
+
+EPOCHS = 12
+M0, MMAX = 64, 512
+
+
+def _trainer(method: str, m0: int, m_max: int, estimator: str, train, val, seed=0):
+    params = resnet.resnet_init(jax.random.key(seed), depth=8, width=8,
+                                num_classes=10)
+    fns = ModelFns(resnet.resnet_batch_loss, resnet.resnet_loss,
+                   lambda p, b: {"acc": resnet.resnet_accuracy(p, b)})
+    ctrl = AdaptiveBatchController(
+        make_policy(method, m0=m0, m_max=m_max, delta=0.1,
+                    dataset_size=len(train), granule=16, resize_freq=3),
+        base_lr=0.1,
+    )
+    return Trainer(fns, params, sgd(momentum=0.9, weight_decay=5e-4), ctrl,
+                   train, val, estimator=estimator, seed=seed, psn_microbatch=64)
+
+
+def _time_to_final(hist, wall_per_epoch, tol=0.01):
+    final = hist[-1].val_metrics["acc"]
+    for h in hist:
+        if h.val_metrics["acc"] >= final - tol:
+            return (h.epoch + 1) * wall_per_epoch, h.epoch + 1
+    return len(hist) * wall_per_epoch, len(hist)
+
+
+def run() -> list[tuple[str, float, str]]:
+    train, val = imagelike_classification(n=4000, hw=16, num_classes=10,
+                                          noise=0.7, template_rank=4, seed=0)
+    rows = []
+    for name, method, m0, mmax, est in [
+        ("sgd_small", "sgd", M0, M0, "none"),
+        ("sgd_large", "sgd", MMAX, MMAX, "none"),
+        ("adabatch", "adabatch", M0, MMAX, "none"),
+        ("divebatch", "divebatch", M0, MMAX, "exact"),
+    ]:
+        t = _trainer(method, m0, mmax, est, train, val)
+        t0 = time.time()
+        hist = t.run(EPOCHS, verbose=False)
+        wall = time.time() - t0
+        accs = [h.val_metrics["acc"] for h in hist]
+        q = lambda f: accs[max(int(len(accs) * f) - 1, 0)]
+        tt, ep = _time_to_final(hist, wall / EPOCHS)
+        rows.append((
+            f"table1_{name}",
+            wall / EPOCHS * 1e6,
+            f"acc25={q(.25):.3f};acc50={q(.5):.3f};acc75={q(.75):.3f};"
+            f"acc100={q(1.):.3f};time_to_1pct_s={tt:.1f};epochs_to_1pct={ep};"
+            f"end_batch={hist[-1].batch_size}",
+        ))
+    return rows

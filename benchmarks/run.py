@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_estimators,
+        bench_kernels,
+        bench_synthetic,
+        bench_table1,
+        bench_table2_memory,
+        roofline,
+    )
+
+    modules = [
+        ("synthetic(fig1/2)", bench_synthetic),
+        ("table1", bench_table1),
+        ("table2(memory)", bench_table2_memory),
+        ("estimators", bench_estimators),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for label, mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{label},0,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

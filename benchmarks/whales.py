@@ -1,0 +1,107 @@
+"""Hillclimb profiler: compile one cell and print the top collective / HBM
+instructions with execution counts (the 'profile' of the dry-run world).
+
+  PYTHONPATH=src python -m benchmarks.whales --arch kimi-k2-1t-a32b --shape train_4k
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import re  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES  # noqa: E402
+from repro.dist.plan import use_plan  # noqa: E402
+from repro.launch import dryrun as dr  # noqa: E402
+from repro.launch.mesh import make_plan, make_production_mesh  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.utils import pytree as ptu  # noqa: E402
+from repro.utils.hlo import COLLECTIVE_KINDS, HloProgram, _CALL_TARGET_RE  # noqa: E402
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 tuning: dict | None = None):
+    cfg = dr.dryrun_config(arch)
+    tuning = tuning or {}
+    if "config" in tuning:
+        cfg = cfg.replace(**tuning["config"])
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(mesh, param_bytes=ptu.tree_bytes(tf.param_specs(cfg)))
+    builders = {"train": dr.build_train, "prefill": dr.build_prefill,
+                "decode": dr.build_decode}
+    with use_plan(plan, dr.act_specs_for(cfg, plan, shape.kind)):
+        jitted, args, info = builders[shape.kind](cfg, shape, plan, tuning)
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+    return compiled, info
+
+
+def report(prog: HloProgram, top: int = 12):
+    coll, byts = [], []
+
+    def walk(cname, mult, top_level):
+        comp = prog.computations.get(cname)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+            if ins.opcode.endswith("-done"):
+                continue
+            if op == "while":
+                body = cond = None
+                for key, tgt in re.findall(r"(body|condition)=%?([\w.\-_]+)", ins.line):
+                    if key == "body":
+                        body = tgt
+                    else:
+                        cond = tgt
+                trips = prog.trip_count(cond) if cond else 1
+                walk(body, mult * trips, top_level)
+            elif op in ("fusion", "call"):
+                m = _CALL_TARGET_RE.search(ins.line)
+                if m:
+                    walk(m.group(1), mult, False)
+            elif op in COLLECTIVE_KINDS:
+                ob = sum(prog.sizes.get(o, 0) for o in ins.operands)
+                rb = prog.sizes.get(ins.name, 0)
+                coll.append((mult * max(rb, ob), mult, ob, rb, op, ins.line[:150]))
+            if top_level and op not in (
+                "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+                "while", "after-all", "partition-id", "iota",
+            ):
+                io = ins.result_bytes + sum(prog.sizes.get(o, 0) for o in ins.operands)
+                byts.append((io * mult, mult, io, op, ins.line[:130]))
+
+    walk(prog.entry, 1.0, True)
+    coll.sort(reverse=True)
+    print("== collectives (result-weighted bytes x execs) ==")
+    for c in coll[:top]:
+        print(f"{c[0]:.2e} x{c[1]:6.0f} op={c[2]:.1e} res={c[3]:.1e} {c[4]:14s} {c[5][:110]}")
+    byts.sort(reverse=True)
+    print("== HBM traffic ==")
+    for b in byts[:top]:
+        print(f"{b[0]:.2e} x{b[1]:6.0f} {b[2]:.1e}B {b[3]:14s} {b[4][:115]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--num-micro", type=int)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    tuning = {"num_micro": args.num_micro} if args.num_micro else {}
+    compiled, info = compile_cell(args.arch, args.shape, args.multi_pod, tuning)
+    print("info:", info)
+    report(HloProgram(compiled.as_text()), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""End-to-end LM training driver: the production train step (microbatch
+accumulation + moment-estimator DiveBatch) on a transformer LM.
+
+Default is a CPU-friendly ~20M-param model for a quick demo; --model-100m
+selects the ~100M configuration (same code path; a few hundred steps of it
+is the intended single-host run, several minutes/step on CPU — on TPU this
+is the config the dry-run lowers for 256 chips).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 30
+  PYTHONPATH=src python examples/train_lm.py --model-100m --steps 300
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import batch_policy, diversity
+from repro.data import TokenStream
+from repro.models import transformer as tf
+from repro.optim import sgd
+from repro.train import epoch_end_host, init_state, make_train_step
+from repro.ckpt import CheckpointManager
+
+
+def model_config(big: bool) -> ModelConfig:
+    if big:  # ~100M params
+        return ModelConfig(
+            name="lm-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32_000,
+            param_dtype="float32", compute_dtype="float32", xent_chunk=128,
+            remat=False,
+        )
+    return ModelConfig(  # ~20M params
+        name="lm-20m", family="dense", num_layers=6, d_model=384,
+        num_heads=6, num_kv_heads=2, d_ff=1024, vocab_size=8_000,
+        param_dtype="float32", compute_dtype="float32", xent_chunk=128,
+        remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--model-100m", action="store_true")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--micro-batch", type=int, default=4)
+    ap.add_argument("--m0", type=int, default=8, help="initial global batch (sequences)")
+    ap.add_argument("--m-max", type=int, default=64)
+    ap.add_argument("--delta", type=float, default=0.5,
+                    help="DiveBatch scale: m = delta * n_epoch * Delta_hat")
+    ap.add_argument("--epoch-steps", type=int, default=10,
+                    help="steps per 'epoch' (diversity/batch-size update period)")
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_config(args.model_100m)
+    params = tf.init_params(cfg, jax.random.key(0))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    opt = sgd(momentum=0.9)
+    state = init_state(params, opt)
+    stream = TokenStream(cfg.vocab_size, seed=0)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    # one compiled step per batch bucket (powers of two over the microbatch)
+    step_cache: dict[int, callable] = {}
+
+    def get_step(global_batch: int):
+        num_micro = global_batch // args.micro_batch
+        if num_micro not in step_cache:
+            step_cache[num_micro] = jax.jit(
+                make_train_step(cfg, opt, num_micro=num_micro, diversity_on=True)
+            )
+        return step_cache[num_micro]
+
+    m = batch_policy.bucket(args.m0, args.micro_batch, m_max=args.m_max)
+    lr = args.lr
+    # "epoch" = args.epoch_steps optimizer steps over the endless stream
+    tokens_per_epoch = None
+    for step in range(args.steps):
+        batch_np = stream.batch(step, m, args.seq_len)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        t0 = time.time()
+        state, metrics = get_step(m)(state, batch, jnp.float32(lr))
+        dt = time.time() - t0
+        if (step + 1) % args.epoch_steps == 0:
+            n_seen = float(state.div_state.sample_count)
+            delta_hat, state = epoch_end_host(state, "moment")
+            raw = args.delta * n_seen * delta_hat
+            m_new = batch_policy.bucket(int(max(raw, 1)), args.micro_batch,
+                                        m_max=args.m_max)
+            print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"dt={dt:.2f}s  Delta={delta_hat:.4f} -> batch {m} -> {m_new}")
+            m = m_new
+            if mgr:
+                mgr.save(step + 1, {"state": state}, extra={"batch": m, "lr": lr})
+        elif step % 5 == 0:
+            print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} dt={dt:.2f}s batch={m}")
+
+    print(f"done. compiled buckets: {sorted(step_cache)} (num_micro values)")
+
+
+if __name__ == "__main__":
+    main()

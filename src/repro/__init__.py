@@ -1,0 +1,18 @@
+"""DiveBatch-JAX: gradient-diversity-aware adaptive batch sizing
+(Chen, Wang & Sundaram 2025) as a multi-pod JAX training/inference framework.
+
+Subpackages:
+  core     the paper's contribution: diversity estimators + batch policies
+  models   transformer zoo (dense/GQA, MoE, Mamba, hybrid, encoder), resnet
+  optim    SGD+momentum / AdamW / schedules
+  data     synthetic datasets + resumable sharded loaders
+  dist     sharding plans/rules, gradient compression
+  train    production train step + host training loop
+  serve    batched prefill/decode engine
+  ckpt     atomic sharded checkpoints
+  kernels  Pallas TPU kernels (per-sample grad norms, int8 quant)
+  configs  the 10 assigned architectures
+  launch   mesh, multi-pod dry-run, CLIs, fault-tolerance supervisor
+"""
+
+__version__ = "1.0.0"

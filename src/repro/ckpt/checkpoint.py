@@ -1,0 +1,182 @@
+"""Fault-tolerant checkpointing (no orbax dependency).
+
+Properties required by the system:
+  * ATOMIC: a checkpoint is staged in ``<dir>/.tmp.<step>`` and published with
+    a single ``os.rename`` -> a crash mid-save can never corrupt the latest
+    restorable state.
+  * COMPLETE: callers persist the *entire* adaptive-training state — params,
+    optimizer state, diversity accumulators, controller (batch-size bucket,
+    LR), data cursor, RNG key — so a restart resumes the exact trajectory.
+  * LOGICAL: tensors are stored as host numpy, independent of mesh/topology;
+    restore re-shards onto whatever mesh is live (elastic scaling).
+  * ASYNC: device->host transfer happens synchronously (cheap), file I/O can
+    run on a background thread (``async_save=True``).
+  * BOUNDED: ``keep`` most recent steps are retained.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils import pytree as ptu
+from repro.utils.logging import get_logger
+
+log = get_logger("ckpt")
+
+_META = "meta.json"
+_SHARD_BYTES = 512 * 1024 * 1024  # flush arrays into <=512MB npz volumes
+
+
+def _to_host(tree: Any) -> list[tuple[str, np.ndarray]]:
+    flat = ptu.tree_flatten_with_paths(tree)
+    return [(path, np.asarray(jax.device_get(leaf))) for path, leaf in flat]
+
+
+def save_pytree(directory: str, tree: Any) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat = _to_host(tree)
+    volumes: list[dict[str, np.ndarray]] = [{}]
+    vol_bytes = 0
+    index: dict[str, dict] = {}
+    for i, (path, arr) in enumerate(flat):
+        if vol_bytes > _SHARD_BYTES:
+            volumes.append({})
+            vol_bytes = 0
+        key = f"a{i}"
+        volumes[-1][key] = arr
+        vol_bytes += arr.nbytes
+        index[path] = {
+            "volume": len(volumes) - 1,
+            "key": key,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    for v, arrs in enumerate(volumes):
+        np.savez(os.path.join(directory, f"vol{v}.npz"), **arrs)
+    with open(os.path.join(directory, _META), "w") as f:
+        json.dump({"index": index, "num_volumes": len(volumes)}, f)
+
+
+def load_pytree(directory: str, target: Any | None = None) -> Any:
+    """Load; if ``target`` is given, leaves are mapped into its structure (by
+    flatten order of matching paths) — otherwise a nested dict is returned."""
+    with open(os.path.join(directory, _META)) as f:
+        meta = json.load(f)
+    vols = [
+        np.load(os.path.join(directory, f"vol{v}.npz"))
+        for v in range(meta["num_volumes"])
+    ]
+    by_path = {
+        path: vols[info["volume"]][info["key"]] for path, info in meta["index"].items()
+    }
+    if target is None:
+        nested: dict = {}
+        for path, arr in by_path.items():
+            parts = path.split("/")
+            node = nested
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return nested
+    flat_t = ptu.tree_flatten_with_paths(target)
+    missing = [p for p, _ in flat_t if p not in by_path]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]} (+{max(len(missing)-5,0)} more)")
+    leaves = []
+    for path, ref in flat_t:
+        arr = by_path[path]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {path}: ckpt {arr.shape} vs target {ref.shape}")
+        leaves.append(arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr)
+    treedef = jax.tree.structure(target)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:010d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.startswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save / restore --------------------------------------------------------
+    def save(self, step: int, state: dict[str, Any], extra: dict | None = None) -> None:
+        """``state``: dict of pytrees (tensors). ``extra``: JSON-serialisable
+        host state (controller, cursor, python scalars)."""
+        self.wait()  # one in-flight save at a time
+        host = {k: _to_host_tree(v) for k, v in state.items()}
+
+        def _write():
+            tmp = os.path.join(self.root, f".tmp.step_{step:010d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for k, v in host.items():
+                save_pytree(os.path.join(tmp, k), v)
+            with open(os.path.join(tmp, "extra.json"), "w") as f:
+                json.dump({"step": step, **(extra or {})}, f)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+            log.info("saved checkpoint step=%d -> %s", step, final)
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def restore(
+        self, targets: dict[str, Any], step: int | None = None
+    ) -> tuple[dict[str, Any], dict]:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._step_dir(step)
+        out = {k: load_pytree(os.path.join(d, k), tgt) for k, tgt in targets.items()}
+        with open(os.path.join(d, "extra.json")) as f:
+            extra = json.load(f)
+        return out, extra
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+def _to_host_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)

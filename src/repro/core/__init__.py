@@ -1,0 +1,33 @@
+"""DiveBatch core: gradient-diversity estimation + adaptive batch policies.
+
+This package is the paper's primary contribution:
+  diversity.py     Delta_hat estimators (exact / gram / moment) + Oracle
+  batch_policy.py  DiveBatch, AdaBatch, Fixed policies + bucketing
+  controller.py    epoch controller coupling batch size <-> learning rate
+"""
+
+from repro.core import diversity
+from repro.core.batch_policy import (
+    AdaBatch,
+    BatchPolicy,
+    DiveBatch,
+    FixedBatch,
+    bucket,
+    make_policy,
+)
+from repro.core.controller import AdaptiveBatchController, lr_rescale, step_decay
+from repro.core.diversity import DiversityState
+
+__all__ = [
+    "diversity",
+    "DiversityState",
+    "BatchPolicy",
+    "FixedBatch",
+    "AdaBatch",
+    "DiveBatch",
+    "bucket",
+    "make_policy",
+    "AdaptiveBatchController",
+    "lr_rescale",
+    "step_decay",
+]

@@ -1,0 +1,113 @@
+"""Epoch-level adaptive-batch controller.
+
+Ties together: a batch policy (DiveBatch / AdaBatch / Fixed), a diversity
+estimator tier, the learning-rate coupling (Goyal et al. linear scaling /
+sqrt / none), and the background LR schedule (the paper uses step decay
+x0.75 every 20 epochs on synthetic; the CIFAR recipes use their own decay).
+
+The controller is a host-side object; everything it returns feeds either the
+data pipeline (batch size) or the next compiled-step bucket (lr is a traced
+scalar argument so LR changes never recompile).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.batch_policy import BatchPolicy, PolicyInfo
+
+
+def lr_rescale(rule: str, lr: float, m_old: int, m_new: int) -> float:
+    if m_old == m_new or rule == "none":
+        return lr
+    ratio = m_new / m_old
+    if rule == "linear":
+        return lr * ratio
+    if rule == "sqrt":
+        return lr * ratio ** 0.5
+    raise ValueError(f"unknown lr rescale rule {rule!r}")
+
+
+@dataclasses.dataclass
+class EpochDecision:
+    epoch: int
+    batch_size: int
+    lr: float
+    diversity: float | None
+    raw_batch_size: float
+    rescaled: bool
+
+
+class AdaptiveBatchController:
+    def __init__(
+        self,
+        policy: BatchPolicy,
+        base_lr: float,
+        lr_rule: str = "none",
+        lr_schedule: Callable[[int, float], float] | None = None,
+        estimator: str = "moment",
+    ):
+        """``lr_schedule(epoch, lr) -> lr`` is the *background* decay applied
+        on top of batch-coupled rescaling (e.g. x0.75 every 20 epochs)."""
+        self.policy = policy
+        self.lr = float(base_lr)
+        self.base_lr = float(base_lr)
+        self.lr_rule = lr_rule
+        self.lr_schedule = lr_schedule
+        self.estimator = estimator
+        self.epoch = 0
+        self.history: list[EpochDecision] = []
+
+    @property
+    def batch_size(self) -> int:
+        return self.policy.m
+
+    @property
+    def needs_diversity(self) -> bool:
+        return self.policy.needs_diversity
+
+    def on_epoch_end(self, diversity: float | None = None) -> EpochDecision:
+        m_old = self.policy.m
+        info: PolicyInfo = self.policy.on_epoch_end(self.epoch, diversity)
+        m_new = info.batch_size
+        self.lr = lr_rescale(self.lr_rule, self.lr, m_old, m_new)
+        if self.lr_schedule is not None:
+            self.lr = self.lr_schedule(self.epoch, self.lr)
+        decision = EpochDecision(
+            epoch=self.epoch,
+            batch_size=m_new,
+            lr=self.lr,
+            diversity=info.diversity,
+            raw_batch_size=info.raw_batch_size,
+            rescaled=m_old != m_new,
+        )
+        self.history.append(decision)
+        self.epoch += 1
+        return decision
+
+    # -- checkpointable state -------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "policy": self.policy.state_dict(),
+            "lr": self.lr,
+            "epoch": self.epoch,
+            "history": [dataclasses.asdict(d) for d in self.history],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.policy.load_state_dict(state["policy"])
+        self.lr = float(state["lr"])
+        self.epoch = int(state["epoch"])
+        self.history = [EpochDecision(**d) for d in state.get("history", [])]
+
+
+def step_decay(factor: float = 0.75, every: int = 20) -> Callable[[int, float], float]:
+    """The paper's synthetic-experiment schedule: lr *= factor every N epochs."""
+
+    def schedule(epoch: int, lr: float) -> float:
+        if (epoch + 1) % every == 0:
+            return lr * factor
+        return lr
+
+    return schedule

@@ -1,0 +1,14 @@
+from repro.data.pipeline import Cursor, EpochLoader, epoch_permutation, microbatches, put_global_batch
+from repro.data.synthetic import ArrayDataset, TokenStream, imagelike_classification, sigmoid_synthetic
+
+__all__ = [
+    "ArrayDataset",
+    "TokenStream",
+    "sigmoid_synthetic",
+    "imagelike_classification",
+    "Cursor",
+    "EpochLoader",
+    "epoch_permutation",
+    "microbatches",
+    "put_global_batch",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated in
+interpret mode on CPU; see tests/test_kernels.py):
+
+  psgn.py   per-sample gradient squared norms (direct + gram factorisations)
+  quant.py  fused rowwise int8 quantisation for cross-pod grad compression
+  ops.py    jit wrappers + cost-model dispatch
+  ref.py    pure-jnp oracles
+"""
+
+from repro.kernels import ops, psgn, quant, ref
+
+__all__ = ["ops", "psgn", "quant", "ref"]

@@ -1,0 +1,78 @@
+"""Jit-ready wrappers around the Pallas kernels with cost-model dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import psgn as psgn_kernels
+from repro.kernels import quant as quant_kernels
+
+
+def choose_method(s: int, d_in: int, d_out: int) -> str:
+    """FLOP-count dispatch between the two per-sample-grad-norm kernels:
+    direct ~ 2*S*Din*Dout, gram ~ 2*S^2*(Din+Dout)."""
+    direct = 2.0 * s * d_in * d_out
+    gram = 2.0 * s * s * (d_in + d_out)
+    return "direct" if direct <= gram else "gram"
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def persample_sq_norm(
+    x: jax.Array,  # (B, S, Din) or (B, Din)
+    delta: jax.Array,  # (B, S, Dout) or (B, Dout)
+    method: str = "auto",
+    interpret: bool = True,
+) -> jax.Array:
+    """(B,) per-sample squared Frobenius norm of the dense-layer gradient.
+
+    2D inputs (no sequence axis) factorise exactly:
+    ||x_b delta_b^T||_F^2 = ||x_b||^2 * ||delta_b||^2 — no kernel needed.
+    """
+    if x.ndim == 2:
+        xn = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+        dn = jnp.sum(jnp.square(delta.astype(jnp.float32)), axis=-1)
+        return xn * dn
+    b, s, d_in = x.shape
+    d_out = delta.shape[-1]
+    if method == "auto":
+        method = choose_method(s, d_in, d_out)
+    if method == "direct":
+        return psgn_kernels.psgn_direct(
+            x, delta,
+            block_s=min(512, _round_pow2(s)),
+            block_i=min(128, _round_pow2(d_in)),
+            block_j=min(128, _round_pow2(d_out)),
+            interpret=interpret,
+        )
+    if method == "gram":
+        blk = min(256, _round_pow2(s))
+        return psgn_kernels.psgn_gram(x, delta, block_si=blk, block_sj=blk,
+                                      interpret=interpret)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _round_pow2(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def persample_sq_norm_tree(acts: dict, deltas: dict, scale: float = 1.0) -> jax.Array:
+    """Sum per-sample sq-norms over a dict of dense layers (gram-tier total).
+
+    ``deltas`` are probe gradients of a MEAN loss — multiply by batch size
+    (``scale``) to undo the 1/B factor."""
+    total = None
+    for name, x in acts.items():
+        d = deltas[name] * scale
+        v = persample_sq_norm(x, d)
+        total = v if total is None else total + v
+    return total
+
+
+quantize_int8 = quant_kernels.quantize_int8
+dequantize_int8 = quant_kernels.dequantize_int8

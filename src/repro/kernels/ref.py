@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every kernel in this package (tests assert_allclose
+kernel outputs against these over shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def psgn_ref(x: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """(B,) per-sample ||X_b^T Delta_b||_F^2, materialising the per-sample
+    gradient (the thing the kernels avoid)."""
+    g = jnp.einsum(
+        "bsi,bsj->bij", x.astype(jnp.float32), delta.astype(jnp.float32)
+    )
+    return jnp.sum(g * g, axis=(1, 2))
+
+
+def psgn_gram_ref(x: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Same value via the Gram identity (independent derivation)."""
+    gx = jnp.einsum("bsi,bti->bst", x.astype(jnp.float32), x.astype(jnp.float32))
+    gd = jnp.einsum("bsi,bti->bst", delta.astype(jnp.float32), delta.astype(jnp.float32))
+    return jnp.sum(gx * gd, axis=(1, 2))
+
+
+def quantize_int8_ref(x: jnp.ndarray):
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)

@@ -1,0 +1,135 @@
+"""Training CLI: paper reproductions and LM training with adaptive batching.
+
+Examples:
+  python -m repro.launch.train --task synthetic-convex --method divebatch
+  python -m repro.launch.train --task imagelike --method adabatch --epochs 30
+  python -m repro.launch.train --task lm --arch qwen2-7b --reduced \
+      --method divebatch --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AdaptiveBatchController, make_policy, step_decay
+from repro.data import imagelike_classification, sigmoid_synthetic
+from repro.optim import sgd
+from repro.train.loop import ModelFns, Trainer
+from repro.ckpt import CheckpointManager
+
+
+def build_task(task: str, seed: int):
+    from repro.models import resnet, small
+
+    if task == "synthetic-convex":
+        train, val, _ = sigmoid_synthetic(n=20_000, d=512, seed=seed)
+        params = small.logreg_init(jax.random.key(seed), 512)
+        fns = ModelFns(
+            batch_loss=small.logreg_batch_loss,
+            example_loss=small.logreg_loss,
+            metrics=lambda p, b: {"acc": small.logreg_accuracy(p, b)},
+        )
+        return fns, params, train, val
+    if task == "synthetic-nonconvex":
+        train, val, _ = sigmoid_synthetic(n=20_000, d=512, seed=seed)
+        params = small.mlp_init(jax.random.key(seed), 512)
+        fns = ModelFns(
+            batch_loss=small.mlp_batch_loss,
+            example_loss=small.mlp_loss,
+            metrics=lambda p, b: {"acc": small.mlp_accuracy(p, b)},
+            probe_loss=small.mlp_batch_loss_with_probes,
+            probe_specs=small.mlp_probe_specs,
+        )
+        return fns, params, train, val
+    if task == "imagelike":
+        train, val = imagelike_classification(n=6_000, hw=16, num_classes=10, seed=seed)
+        params = resnet.resnet_init(jax.random.key(seed), depth=8, width=8)
+        fns = ModelFns(
+            batch_loss=resnet.resnet_batch_loss,
+            example_loss=resnet.resnet_loss,
+            metrics=lambda p, b: {"acc": resnet.resnet_accuracy(p, b)},
+        )
+        return fns, params, train, val
+    raise ValueError(f"unknown task {task!r}")
+
+
+def make_controller(args, dataset_size: int) -> AdaptiveBatchController:
+    policy = make_policy(
+        args.method,
+        m0=args.batch_size,
+        m_max=args.max_batch_size,
+        delta=args.delta,
+        dataset_size=dataset_size,
+        granule=args.granule,
+        resize_freq=args.resize_freq,
+    )
+    return AdaptiveBatchController(
+        policy,
+        base_lr=args.lr,
+        lr_rule=args.lr_rule,
+        lr_schedule=step_decay(args.lr_decay, args.lr_decay_every) if args.lr_decay < 1 else None,
+        estimator=args.estimator,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="synthetic-convex")
+    ap.add_argument("--method", default="divebatch",
+                    choices=["sgd", "adabatch", "divebatch", "oracle"])
+    ap.add_argument("--estimator", default="exact",
+                    choices=["exact", "gram", "moment", "oracle"])
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--max-batch-size", type=int, default=2048)
+    ap.add_argument("--delta", type=float, default=0.1)
+    ap.add_argument("--granule", type=int, default=16)
+    ap.add_argument("--resize-freq", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--lr-rule", default="none", choices=["none", "linear", "sqrt"])
+    ap.add_argument("--lr-decay", type=float, default=0.75)
+    ap.add_argument("--lr-decay-every", type=int, default=20)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    if args.method == "oracle":
+        args.estimator = "oracle"
+
+    fns, params, train, val = build_task(args.task, args.seed)
+    controller = make_controller(args, len(train))
+    trainer = Trainer(
+        fns, params, sgd(momentum=args.momentum, weight_decay=args.weight_decay),
+        controller, train, val,
+        estimator=args.estimator if args.method in ("divebatch", "oracle") else "none",
+        seed=args.seed,
+        ckpt=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
+        ckpt_every=args.ckpt_every,
+    )
+    if args.resume and trainer.ckpt:
+        trainer.resume()
+    remaining = args.epochs - trainer.cursor.epoch
+    history = trainer.run(max(remaining, 0))
+    if args.out:
+        import dataclasses
+
+        with open(args.out, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in history], f, indent=1)
+    final = history[-1] if history else None
+    if final:
+        print(f"final: epoch={final.epoch} val_loss={final.val_loss:.4f} "
+              f"metrics={final.val_metrics} batch={final.batch_size}")
+
+
+if __name__ == "__main__":
+    main()

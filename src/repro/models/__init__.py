@@ -1,0 +1,3 @@
+from repro.models import attention, layers, moe, resnet, small, ssm, transformer
+
+__all__ = ["attention", "layers", "moe", "resnet", "small", "ssm", "transformer"]

@@ -1,0 +1,292 @@
+"""Attention: GQA with RoPE, optional QKV bias, sliding window, logit softcap.
+
+Two memory regimes:
+  * ``attention()``        — materialises (B,H,Sq,Sk) scores. Used for short
+                             sequences (train_4k smoke) and as the oracle.
+  * ``flash_attention()``  — chunked streaming-softmax over KV blocks
+                             (lax.scan), O(Sq*block) live memory. Used for
+                             long prefill where (S,S) scores would not fit.
+  * ``decode_attention()`` — single-query attention against a KV cache.
+
+All functions take q:(B,Sq,H,hd), k/v:(B,Sk,KV,hd) with H % KV == 0 (GQA) and
+return (B,Sq,H,hd).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.plan import constrain
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd
+    )
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (Sq,)
+    k_pos: jax.Array,  # (Sk,)
+    causal: bool,
+    window: int | None,
+) -> jax.Array:
+    """(Sq, Sk) additive bias: 0 where attendable, NEG_INF where masked."""
+    rel = q_pos[:, None] - k_pos[None, :]  # >0 means key in the past
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok = ok & (rel >= 0)
+    if window is not None:
+        ok = ok & (rel < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    bias = _mask_bias(
+        jnp.arange(sq) + q_offset, jnp.arange(k.shape[1]), causal, window
+    )
+    logits = logits + bias[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_forward(q, k, v, causal, window, softcap, q_block, kv_block):
+    """Returns (out (b,sq,h,hd), lse (b,nq,h,q_block)) — the flash forward.
+
+    Outer vmap over query blocks (sharded over the TP axis, Ulysses-style,
+    via the 'attn_q' constraint), inner lax.scan over KV blocks carrying
+    (running_max, denominator, numerator)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, sk, q_block, kv_block)
+    n_rep = h // k.shape[2]
+    scale = hd ** -0.5
+    nq, nk = sq // q_block, sk // kv_block
+    qb = q.reshape(b, nq, q_block, h, hd)
+    qb = constrain(qb, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+
+    def per_qblock(qi, q_blk):  # (b, q_block, h, hd)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj):
+            m_prev, l_prev, acc = carry
+            k_blk = _repeat_kv(jax.lax.dynamic_slice_in_dim(k, kj * kv_block, kv_block, 1), n_rep)
+            v_blk = _repeat_kv(jax.lax.dynamic_slice_in_dim(v, kj * kv_block, kv_block, 1), n_rep)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+            if softcap is not None:
+                logits = jnp.tanh(logits / softcap) * softcap
+            bias = _mask_bias(q_pos, kj * kv_block + jnp.arange(kv_block), causal, window)
+            logits = logits + bias[None, None]
+            m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_prev * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        acc0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0), jnp.arange(nk))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+        lse = m + jnp.log(l_safe)  # (b, h, q_block)
+        return out, lse
+
+    out, lse = jax.vmap(per_qblock, in_axes=(0, 1), out_axes=(1, 1))(jnp.arange(nq), qb)
+    out = constrain(out, "attn_q")
+    return out.reshape(b, sq, h, hd), lse  # lse: (b, nq, h, q_block)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Streaming-softmax attention, O(q_block * kv_block) live scores.
+
+    custom_vjp: scan-under-grad would stack every KV step's probability block
+    for the backward (O(S^2) HBM traffic and the single largest byte source
+    in the measured HLO). The backward here is the standard flash recompute:
+    residuals are (q, k, v, out, lse); pass 1 re-streams KV blocks to get dq
+    (sharded over q blocks), pass 2 re-streams Q blocks to get dk, dv
+    (sharded over kv blocks)."""
+    return _flash_forward(q, k, v, causal, window, softcap, q_block, kv_block)[0]
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, q_block, kv_block):
+    out, lse = _flash_forward(q, k, v, causal, window, softcap, q_block, kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, softcap, q_block, kv_block, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kv_heads = k.shape[2]
+    n_rep = h // kv_heads
+    scale = hd ** -0.5
+    nq, nk = sq // q_block, sk // kv_block
+
+    qb = constrain(q.reshape(b, nq, q_block, h, hd), "attn_q")
+    dob = constrain(dout.reshape(b, nq, q_block, h, hd), "attn_q")
+    ob = constrain(out.reshape(b, nq, q_block, h, hd), "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+    # delta_i = rowsum(dout_i * out_i): (b, nq, h, q_block)
+    delta = jnp.einsum("bnqhd,bnqhd->bnhq", dob.astype(jnp.float32), ob.astype(jnp.float32))
+
+    def _block_dlogits(q_blk, k_blk, lse_blk, delta_blk, do_blk, v_blk, q_pos, k_pos):
+        """Recompute p and dlogits for one (q_block, kv_block) tile.
+        Shapes: q_blk (b,qc,h,hd), k_blk/v_blk (b,kc,h,hd) [already repeated],
+        lse_blk/delta_blk (b,h,qc), do_blk (b,qc,h,hd)."""
+        raw = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+        if softcap is not None:
+            capped = jnp.tanh(raw / softcap)
+            logits = capped * softcap
+        else:
+            logits = raw
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        logits = logits + bias[None, None]
+        p = jnp.exp(logits - lse_blk[..., None])  # (b,h,qc,kc)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", do_blk, v_blk).astype(jnp.float32)
+        dlogits = p * (dp - delta_blk[..., None])
+        if softcap is not None:
+            dlogits = dlogits * (1.0 - capped * capped)
+        return p, dlogits
+
+    # ---- pass 1: dq, sharded over q blocks -------------------------------
+    def dq_qblock(qi, q_blk, lse_blk, delta_blk, do_blk):
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(dq_acc, kj):
+            k_blk = _repeat_kv(jax.lax.dynamic_slice_in_dim(k, kj * kv_block, kv_block, 1), n_rep)
+            v_blk = _repeat_kv(jax.lax.dynamic_slice_in_dim(v, kj * kv_block, kv_block, 1), n_rep)
+            _, dlogits = _block_dlogits(
+                q_blk, k_blk, lse_blk, delta_blk, do_blk, v_blk,
+                q_pos, kj * kv_block + jnp.arange(kv_block),
+            )
+            dq_acc = dq_acc + jnp.einsum(
+                "bhqk,bkhd->bqhd", dlogits.astype(k_blk.dtype), k_blk
+            ).astype(jnp.float32) * scale
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, q_block, h, hd), jnp.float32)
+        dq, _ = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+        return dq
+
+    dq = jax.vmap(dq_qblock, in_axes=(0, 1, 1, 1, 1), out_axes=1)(
+        jnp.arange(nq), qb, lse, delta, dob
+    )
+    dq = constrain(dq, "attn_q").reshape(b, sq, h, hd).astype(q.dtype)
+
+    # ---- pass 2: dk/dv, sharded over kv blocks ----------------------------
+    kb = constrain(k.reshape(b, nk, kv_block, kv_heads, hd), "attn_q")
+    vb = constrain(v.reshape(b, nk, kv_block, kv_heads, hd), "attn_q")
+
+    def dkv_kvblock(kj, k_blk_s, v_blk_s):
+        k_blk = _repeat_kv(k_blk_s, n_rep)
+        v_blk = _repeat_kv(v_blk_s, n_rep)
+        k_pos = kj * kv_block + jnp.arange(kv_block)
+
+        def q_step(carry, qi):
+            dk_acc, dv_acc = carry
+            q_blk = jax.lax.dynamic_slice_in_dim(qb, qi, 1, 1)[:, 0]
+            do_blk = jax.lax.dynamic_slice_in_dim(dob, qi, 1, 1)[:, 0]
+            lse_blk = jax.lax.dynamic_slice_in_dim(lse, qi, 1, 1)[:, 0]
+            delta_blk = jax.lax.dynamic_slice_in_dim(delta, qi, 1, 1)[:, 0]
+            p, dlogits = _block_dlogits(
+                q_blk, k_blk, lse_blk, delta_blk, do_blk, v_blk,
+                qi * q_block + jnp.arange(q_block), k_pos,
+            )
+            dv_acc = dv_acc + jnp.einsum(
+                "bhqk,bqhd->bkhd", p.astype(do_blk.dtype), do_blk
+            ).astype(jnp.float32)
+            dk_acc = dk_acc + jnp.einsum(
+                "bhqk,bqhd->bkhd", dlogits.astype(q_blk.dtype), q_blk
+            ).astype(jnp.float32) * scale
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, kv_block, h, hd), jnp.float32)
+        (dk_full, dv_full), _ = jax.lax.scan(q_step, (z, z), jnp.arange(nq))
+        # GQA: fold the repeated-head axis back onto kv heads
+        dk_s = dk_full.reshape(b, kv_block, kv_heads, n_rep, hd).sum(3)
+        dv_s = dv_full.reshape(b, kv_block, kv_heads, n_rep, hd).sum(3)
+        return dk_s, dv_s
+
+    dk, dv = jax.vmap(dkv_kvblock, in_axes=(0, 1, 1), out_axes=1)(
+        jnp.arange(nk), kb, vb
+    )
+    dk = constrain(dk, "attn_q").reshape(b, sk, kv_heads, hd).astype(k.dtype)
+    dv = constrain(dv, "attn_q").reshape(b, sk, kv_heads, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar or (B,) — number of valid cache entries
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // kv)
+    v = _repeat_kv(v_cache, h // kv)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * hd ** -0.5
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # (B, S)
+    if window is not None:
+        valid = valid & (pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def choose_attention(sq: int, sk: int, flash_threshold: int = 4096):
+    """Pick the dense or flash implementation by sequence length."""
+    if max(sq, sk) > flash_threshold:
+        return flash_attention
+    return functools.partial(attention)

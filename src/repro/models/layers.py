@@ -1,0 +1,133 @@
+"""Primitive layers: inits, norms, dense (+probe hook), rotary embeddings.
+
+Everything is a pure function over explicit parameter pytrees (dicts). The
+``probe`` argument on :func:`dense` is the gram-estimator hook: a zero array
+of the output's shape added to the output — ``grad`` w.r.t. it equals the
+upstream activation gradient, which together with the saved input activation
+yields per-sample gradient norms without a second backward pass
+(see kernels/psgn.py and DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None,
+               use_bias: bool = False) -> dict:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"kernel": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def norm_init(d: int, dtype=jnp.float32, with_bias: bool = False) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Applies
+# ---------------------------------------------------------------------------
+
+
+def dense(params: dict, x: jax.Array, probe: jax.Array | None = None) -> jax.Array:
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    if probe is not None:
+        y = y + probe.astype(x.dtype)
+    return y
+
+
+def embed(params: dict, ids: jax.Array) -> jax.Array:
+    return params["embedding"][ids]
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layer_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def group_norm(params: dict, x: jax.Array, groups: int, eps: float = 1e-5) -> jax.Array:
+    """NHWC group norm — per-sample (no cross-batch stats), so per-sample
+    gradients are well defined (DESIGN.md §3: replaces BatchNorm)."""
+    n, h, w, c = x.shape
+    dtype = x.dtype
+    xg = x.astype(jnp.float32).reshape(n, h, w, groups, c // groups)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(n, h, w, c) * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu, "relu": jax.nn.relu}

@@ -1,0 +1,181 @@
+"""Gram-tier diversity estimation for transformers: probe-instrumented
+forward + per-sample gradient norms via the Pallas psgn kernels.
+
+Adds a zero 'probe' on the output of every DENSE layer of an (eager-mode)
+transformer; ``grad`` w.r.t. the probes equals the upstream activation
+gradients, and together with the saved inputs the per-sample gradient
+squared norm of each dense kernel is
+
+    ||G_b||_F^2 = ||X_b^T Delta_b||_F^2      (kernels/psgn.py, no
+                                              materialisation of G_b)
+
+Coverage: attention q/k/v/o + dense FFN kernels (the matmul parameters that
+dominate the parameter count). Embeddings, norms, MoE expert tensors and
+SSM scan parameters are excluded — ``coverage(cfg)`` reports the covered
+fraction so callers can decide (the moment tier has full coverage and is
+the default at scale; this tier exists for medium-scale models where exact
+per-sample statistics are wanted without vmap's memory blowup).
+
+Eager mode only (``cfg.scan_layers=False``): probes are per-layer pytree
+leaves, which a scanned stack cannot address individually.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.models.layers import apply_rope, dense, embed
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf
+from repro.models.moe import moe_apply
+
+
+def _dense_probe_names(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """[(probe name, output width)] for every covered dense layer."""
+    hd = cfg.resolved_head_dim
+    out = []
+    for r in range(cfg.repeats):
+        for p in range(cfg.period):
+            kind = cfg.pattern[p]
+            base = f"l{r}p{p}"
+            if kind in ("attn", "attn_local"):
+                out += [
+                    (f"{base}.q", cfg.num_heads * hd),
+                    (f"{base}.k", cfg.num_kv_heads * hd),
+                    (f"{base}.v", cfg.num_kv_heads * hd),
+                    (f"{base}.o", cfg.d_model),
+                ]
+            if cfg.d_ff > 0 and cfg.ffn_kind(p) == "dense":
+                if cfg.ffn_glu:
+                    out += [(f"{base}.gate", cfg.d_ff), (f"{base}.up", cfg.d_ff)]
+                else:
+                    out += [(f"{base}.in", cfg.d_ff)]
+                out += [(f"{base}.down", cfg.d_model)]
+    return out
+
+
+def probe_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        name: jnp.zeros((batch, seq, width), dt)
+        for name, width in _dense_probe_names(cfg)
+    }
+
+
+def coverage(cfg: ModelConfig) -> float:
+    """Fraction of parameters whose per-sample grad norm the gram tier covers."""
+    hd = cfg.resolved_head_dim
+    per_layer_attn = cfg.d_model * hd * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+        + cfg.num_heads * hd * cfg.d_model
+    covered = 0
+    for p in range(cfg.period):
+        if cfg.pattern[p] in ("attn", "attn_local"):
+            covered += per_layer_attn
+        if cfg.d_ff > 0 and cfg.ffn_kind(p) == "dense":
+            mult = 3 if cfg.ffn_glu else 2
+            covered += mult * cfg.d_model * cfg.d_ff
+    covered *= cfg.repeats
+    from repro.utils import pytree as ptu
+
+    total = ptu.tree_count(tf.param_specs(cfg))
+    return covered / total
+
+
+def loss_with_probes(cfg: ModelConfig, params, probes: dict, batch: dict,
+                     moe_groups: int = 1):
+    """(loss, saved dense-layer inputs). Same math as tf.loss_fn (verified in
+    tests to the last ulp when probes are zero)."""
+    assert not cfg.scan_layers, "gram probes require eager (non-scanned) mode"
+    acts: dict = {}
+
+    def pdense(p, x, name):
+        if name in probes:
+            acts[name] = x
+            return dense(p, x, probe=probes[name])
+        return dense(p, x)
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], batch["tokens"]).astype(cdt)
+    else:
+        x = dense(params["frontend"], batch["embeddings"].astype(cdt))
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    hd = cfg.resolved_head_dim
+    aux = jnp.zeros((), jnp.float32)
+
+    for r in range(cfg.repeats):
+        for p in range(cfg.period):
+            blk = jax.tree.map(lambda leaf: leaf[r], params[f"pos{p}"])
+            kind = cfg.pattern[p]
+            base = f"l{r}p{p}"
+            h = tf._norm(cfg, blk["norm"], x)
+            if kind == "mamba":
+                h = ssm_lib.mamba_apply(
+                    blk["mamba"], h, d_state=cfg.ssm_state, dt_rank=cfg.dt_rank,
+                    chunk=cfg.ssm_chunk,
+                )
+            else:
+                ap = blk["attn"]
+                q = pdense(ap["q"], h, f"{base}.q").reshape(b, s, cfg.num_heads, hd)
+                k = pdense(ap["k"], h, f"{base}.k").reshape(b, s, cfg.num_kv_heads, hd)
+                v = pdense(ap["v"], h, f"{base}.v").reshape(b, s, cfg.num_kv_heads, hd)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                window = cfg.window if kind == "attn_local" else None
+                o = attn_lib.attention(q, k, v, causal=cfg.causal, window=window,
+                                       softcap=cfg.attn_softcap)
+                h = pdense(ap["o"], o.reshape(b, s, cfg.num_heads * hd), f"{base}.o")
+            x = x + h
+            if "ffn" in blk:
+                h = tf._norm(cfg, blk["ffn_norm"], x)
+                if cfg.ffn_kind(p) == "moe":
+                    h, a = moe_apply(blk["ffn"], h, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     groups=moe_groups, act=cfg.ffn_act)
+                    aux = aux + a
+                else:
+                    from repro.models.layers import ACTIVATIONS
+
+                    act_fn = ACTIVATIONS[cfg.ffn_act]
+                    if cfg.ffn_glu:
+                        hh = act_fn(pdense(blk["ffn"]["w_gate"], h, f"{base}.gate"))
+                        hh = hh * pdense(blk["ffn"]["w_up"], h, f"{base}.up")
+                    else:
+                        hh = act_fn(pdense(blk["ffn"]["w_in"], h, f"{base}.in"))
+                    h = pdense(blk["ffn"]["w_out"], hh, f"{base}.down")
+                x = x + h
+
+    x = tf._norm(cfg, params["final_norm"], x)
+    loss = tf.xent_chunked(x, params["lm_head"]["kernel"], batch["targets"],
+                           cfg.xent_chunk, cfg.final_softcap)
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+    return loss, acts
+
+
+def persample_sq_norms_gram(cfg: ModelConfig, params, batch: dict,
+                            moe_groups: int = 1) -> jax.Array:
+    """(B,) per-sample gradient sq-norms over the covered dense kernels.
+
+    The sample unit is a SEQUENCE; per-sample loss = that sequence's mean
+    token CE (matching vmap-of-per-sequence-loss semantics). loss is the
+    batch mean, so probe grads are scaled by B."""
+    tokens = batch["tokens"] if "tokens" in batch else batch["embeddings"]
+    b, s = tokens.shape[0], tokens.shape[1]
+    probes = probe_specs(cfg, b, s)
+    (loss, acts), pgrads = jax.value_and_grad(
+        lambda pr: loss_with_probes(cfg, params, pr, batch, moe_groups),
+        has_aux=True,
+    )(probes)
+    total = None
+    for name, x in acts.items():
+        delta = pgrads[name] * np.float32(b)
+        v = kernel_ops.persample_sq_norm(x, delta)
+        total = v if total is None else total + v
+    return total

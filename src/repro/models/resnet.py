@@ -1,0 +1,108 @@
+"""ResNet-20-family CNN for the CIFAR reproduction (He et al. 2016).
+
+GroupNorm replaces BatchNorm so per-sample gradients are well defined
+(DESIGN.md §3/§9). Widths/stage layout follow the CIFAR ResNet-20 recipe:
+3 stages x n basic blocks, widths (16, 32, 64), n = (depth-2)/6 = 3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import group_norm, norm_init
+
+
+def _conv_init(key, k: int, c_in: int, c_out: int, dtype=jnp.float32) -> jax.Array:
+    fan_in = k * k * c_in
+    return (jax.random.normal(key, (k, k, c_in, c_out)) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn_groups(c: int) -> int:
+    for g in (8, 4, 2, 1):
+        if c % g == 0:
+            return g
+    return 1
+
+
+def resnet_init(key, depth: int = 20, num_classes: int = 10, width: int = 16,
+                dtype=jnp.float32) -> dict:
+    assert (depth - 2) % 6 == 0, "depth must be 6n+2"
+    n = (depth - 2) // 6
+    widths = [width, 2 * width, 4 * width]
+    keys = iter(jax.random.split(key, 4 + 6 * 3 * n + 3))
+    params: dict = {
+        "stem": {"conv": _conv_init(next(keys), 3, 3, width, dtype),
+                 "norm": norm_init(width, dtype, with_bias=True)},
+        "stages": [],
+    }
+    c_in = width
+    for s, c_out in enumerate(widths):
+        blocks = []
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = {
+                "conv1": _conv_init(next(keys), 3, c_in, c_out, dtype),
+                "norm1": norm_init(c_out, dtype, with_bias=True),
+                "conv2": _conv_init(next(keys), 3, c_out, c_out, dtype),
+                "norm2": norm_init(c_out, dtype, with_bias=True),
+            }
+            if stride != 1 or c_in != c_out:
+                blk["proj"] = _conv_init(next(keys), 1, c_in, c_out, dtype)
+            blocks.append(blk)
+            c_in = c_out
+        params["stages"].append(blocks)
+    params["head"] = {
+        "kernel": (jax.random.normal(next(keys), (c_in, num_classes)) / jnp.sqrt(c_in)).astype(dtype),
+        "bias": jnp.zeros((num_classes,), dtype),
+    }
+    return params
+
+
+def resnet_forward(params: dict, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    h = _conv(x, params["stem"]["conv"])
+    h = jax.nn.relu(group_norm(params["stem"]["norm"], h, _gn_groups(h.shape[-1])))
+    for stage in params["stages"]:
+        for blk in stage:
+            stride = 2 if "proj" in blk and blk["conv1"].shape[2] != blk["conv1"].shape[3] else 1
+            # stride derivation: downsampling blocks are exactly those with a
+            # channel-increasing projection
+            y = _conv(h, blk["conv1"], stride)
+            y = jax.nn.relu(group_norm(blk["norm1"], y, _gn_groups(y.shape[-1])))
+            y = _conv(y, blk["conv2"])
+            y = group_norm(blk["norm2"], y, _gn_groups(y.shape[-1]))
+            sc = _conv(h, blk["proj"], stride) if "proj" in blk else h
+            h = jax.nn.relu(y + sc)
+    pooled = h.mean(axis=(1, 2))
+    return pooled @ params["head"]["kernel"].astype(pooled.dtype) + params["head"]["bias"].astype(pooled.dtype)
+
+
+def resnet_loss(params: dict, example: dict) -> jax.Array:
+    """Per-sample (or batch-mean) softmax CE. example['x']: (..., H, W, 3)."""
+    x = example["x"]
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    logits = resnet_forward(params, x).astype(jnp.float32)
+    y = jnp.atleast_1d(example["y"])
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - tgt)
+    return loss
+
+
+def resnet_batch_loss(params: dict, batch: dict) -> jax.Array:
+    return resnet_loss(params, batch)
+
+
+def resnet_accuracy(params: dict, batch: dict) -> jax.Array:
+    logits = resnet_forward(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

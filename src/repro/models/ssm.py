@@ -1,0 +1,180 @@
+"""Mamba-1 (selective SSM) block, TPU-adapted.
+
+The recurrence  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t  is linear in h,
+so prefill/training uses a CHUNKED associative scan: sequence chunks of
+``chunk`` steps run a parallel ``associative_scan`` (O(log chunk) depth, MXU/
+VPU friendly) while an outer ``lax.scan`` threads the boundary state — live
+memory is O(B * chunk * d_inner * d_state) instead of O(B * L * ...).
+
+TP: the SSM is diagonal over channels, so sharding d_inner over the 'model'
+axis parallelises the whole block with zero collective traffic except the
+in/out projections (DESIGN.md §5 'SP/TP for SSM').
+
+Decode keeps O(1) state per layer: (h, conv_buffer) — this is why the SSM and
+hybrid archs run the long_500k cell that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, silu
+
+
+def mamba_init(
+    key,
+    d_model: int,
+    d_state: int = 16,
+    expand: int = 2,
+    conv_dim: int = 4,
+    dt_rank: int = 0,
+    dtype=jnp.float32,
+) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+    return {
+        "in_proj": dense_init(keys[0], d_model, 2 * d_inner, dtype),
+        "conv_kernel": (jax.random.normal(keys[1], (conv_dim, d_inner)) / conv_dim).astype(dtype),
+        "conv_bias": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(keys[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(keys[3], dt_rank, d_inner, dtype, use_bias=True),
+        "A_log": jnp.log(a),  # fp32: A = -exp(A_log)
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(keys[4], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                 init_state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over (B, L, C). kernel: (K, C)."""
+    k = kernel.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+K-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :].astype(x.dtype)
+        for i in range(k)
+    )
+    return out + bias.astype(x.dtype)
+
+
+def _ssm_params(params: dict, x: jax.Array, dt_rank: int, d_state: int):
+    """x: (..., d_inner) -> (dt (...,d_inner), B (...,d_state), C (...,d_state))."""
+    proj = x @ params["x_proj"]["kernel"].astype(x.dtype)
+    dt_in, b, c = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = dt_in @ params["dt_proj"]["kernel"].astype(x.dtype) + params["dt_proj"]["bias"].astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _scan_chunk(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """Associative scan of h_t = a_t * h_{t-1} + bx_t within a chunk.
+
+    a, bx: (B, L, d_inner, d_state); h0: (B, d_inner, d_state).
+    Returns (h_all (B,L,di,ds), h_last)."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    # fold h0 into the first step
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return b_c, b_c[:, -1]
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,  # (B, L, d_model)
+    *,
+    d_state: int,
+    dt_rank: int = 0,
+    chunk: int = 256,
+    return_state: bool = False,
+):
+    b, l, d_model = x.shape
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    d_inner = params["A_log"].shape[0]
+    xz = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_preconv = xi
+    xi = silu(_causal_conv(xi, params["conv_kernel"], params["conv_bias"]))
+
+    dt, bmat, cmat = _ssm_params(params, xi, dt_rank, d_state)
+    a = -jnp.exp(params["A_log"])  # (d_inner, d_state), fp32
+    # discretise: a_bar = exp(dt*A), bx = dt * B * x
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    n_chunks = l // chunk
+
+    def chunk_step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(bmat), sl(cmat), sl(xi)
+        a_bar = jnp.exp(dt_c[..., None] * a[None, None])  # (B,chunk,di,ds)
+        bx = (dt_c * x_c.astype(jnp.float32))[..., None] * b_c[..., None, :]
+        h_all, h_last = _scan_chunk(a_bar, bx, h)
+        y_c = jnp.einsum("blds,bls->bld", h_all, c_c)
+        # state h stays f32 across chunks; the STACKED per-chunk outputs are
+        # cast to the compute dtype (the f32 (n_chunks,B,chunk,d_inner) stack
+        # was the dominant live buffer in the jamba train cell)
+        return h_last, y_c.astype(x.dtype)
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, jnp.arange(n_chunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, d_inner).astype(jnp.float32)
+    y = y + params["D"][None, None] * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * silu(z)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    if return_state:
+        k = params["conv_kernel"].shape[0]
+        state = {"h": h_final, "conv": xi_preconv[:, -(k - 1):, :]}
+        return out, state
+    return out
+
+
+def mamba_decode_init(batch: int, d_model: int, d_state: int, expand: int, conv_dim: int,
+                      dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_dim - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode_step(
+    params: dict,
+    state: dict,
+    x: jax.Array,  # (B, 1, d_model)
+    *,
+    d_state: int,
+    dt_rank: int = 0,
+) -> tuple[jax.Array, dict]:
+    b, _, d_model = x.shape
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    xz = x @ params["in_proj"]["kernel"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,1,d_inner)
+    conv_in = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)  # (B,K,di)
+    kernel = params["conv_kernel"]
+    k = kernel.shape[0]
+    xi = silu((conv_in * kernel.astype(xi.dtype)[None]).sum(axis=1, keepdims=True)
+              + params["conv_bias"].astype(xi.dtype))
+    new_conv = conv_in[:, 1:, :]
+
+    dt, bmat, cmat = _ssm_params(params, xi, dt_rank, d_state)  # (B,1,·)
+    a = -jnp.exp(params["A_log"])
+    a_bar = jnp.exp(dt[0 if False else ...][..., None] * a[None, None])[:, 0]  # (B,di,ds)
+    bx = ((dt * xi.astype(jnp.float32))[..., None] * bmat[..., None, :])[:, 0]
+    h = a_bar * state["h"] + bx
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :]  # (B,1,di)
+    y = y + params["D"][None, None] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * silu(z)
+    out = y @ params["out_proj"]["kernel"].astype(x.dtype)
+    return out, {"h": h, "conv": new_conv}

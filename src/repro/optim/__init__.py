@@ -1,0 +1,21 @@
+from repro.optim.optimizer import (
+    AdamWState,
+    Optimizer,
+    SGDState,
+    adamw,
+    apply_updates,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedules import make_schedule
+
+__all__ = [
+    "Optimizer",
+    "SGDState",
+    "AdamWState",
+    "sgd",
+    "adamw",
+    "apply_updates",
+    "make_optimizer",
+    "make_schedule",
+]

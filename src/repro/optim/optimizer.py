@@ -1,0 +1,131 @@
+"""Minimal optimizer library (optax is not a dependency).
+
+Interface mirrors the (init, update) functional style:
+
+    opt = sgd(momentum=0.9, weight_decay=5e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+
+``lr`` is a *traced argument* of update (not baked into the transform): the
+adaptive-batch controller changes LR at epoch boundaries and must not trigger
+recompilation.
+
+State dtype is configurable (``state_dtype``) so large models can keep
+momenta in bf16 — at 405B params, fp32 momentum alone is 1.6 TB.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]  # (grads, state, params, lr)
+    name: str = "optimizer"
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum, + weight decay) — the paper's optimizer
+# ---------------------------------------------------------------------------
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree  # zeros-like params (empty tuple when momentum == 0)
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False,
+        state_dtype=None) -> Optimizer:
+    use_momentum = momentum != 0.0
+
+    def init(params: PyTree) -> SGDState:
+        if not use_momentum:
+            return SGDState(momentum=())
+        return SGDState(
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params
+            )
+        )
+
+    def update(grads: PyTree, state: SGDState, params: PyTree, lr) -> tuple[PyTree, SGDState]:
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if not use_momentum:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state.momentum, grads
+        )
+        if nesterov:
+            updates = jax.tree.map(lambda m, g: -lr * (momentum * m + g.astype(m.dtype)), new_m, grads)
+        else:
+            updates = jax.tree.map(lambda m: -lr * m, new_m)
+        return updates, SGDState(momentum=new_m)
+
+    return Optimizer(init=init, update=update, name=f"sgd(m={momentum},wd={weight_decay})")
+
+
+# ---------------------------------------------------------------------------
+# AdamW — for the "DiveBatch composes with Adam-family" extension
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype or p.dtype)
+        return AdamWState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree, lr) -> tuple[PyTree, AdamWState]:
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            m_hat = m.astype(jnp.float32) / c1
+            v_hat = v.astype(jnp.float32) / c2
+            step = m_hat / (jnp.sqrt(v_hat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init=init, update=update, name=f"adamw(wd={weight_decay})")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(kw.get("momentum", 0.0), kw.get("weight_decay", 0.0),
+                   kw.get("nesterov", False), kw.get("state_dtype"))
+    if name == "adamw":
+        return adamw(kw.get("b1", 0.9), kw.get("b2", 0.999), kw.get("eps", 1e-8),
+                     kw.get("weight_decay", 0.0), kw.get("state_dtype"))
+    raise ValueError(f"unknown optimizer {name!r}")

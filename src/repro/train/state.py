@@ -1,0 +1,39 @@
+"""Training state: parameters + optimizer + DiveBatch diversity accumulators."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import diversity
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    div_state: diversity.DiversityState
+    step: jax.Array
+
+
+def init_state(params: PyTree, optimizer: Optimizer, div_dtype=jnp.float32) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        div_state=diversity.init_state(params, accum_dtype=div_dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_specs(cfg, optimizer: Optimizer, div_dtype=jnp.float32) -> TrainState:
+    """ShapeDtypeStruct version (no allocation) for the dry-run."""
+    from repro.models import transformer as tf
+
+    params = tf.param_specs(cfg)
+    return jax.eval_shape(
+        lambda p: init_state(p, optimizer, div_dtype), params
+    )

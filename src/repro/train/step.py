@@ -1,0 +1,127 @@
+"""The production LM train step: microbatch gradient accumulation + DiveBatch
+diversity accumulation, as one jitted program.
+
+Batch-size adaptivity at scale = adapting ``num_micro`` (the accumulation
+length): the microbatch shape is fixed per mesh, the global batch is
+``num_micro * micro_batch``, and the compile cache is keyed by the power-of-2
+``num_micro`` bucket (core/batch_policy.bucket).
+
+The microbatch re-layout ``(B, ...) -> (G, M, ...)`` is sharding-preserving:
+it splits the dp-sharded batch dim as (dp, G, M/dp), transposes, and merges
+(dp, M/dp) back into the microbatch dim — every microbatch stays evenly
+spread over all dp shards with zero communication.
+
+Diversity accumulation uses the moment estimator (DESIGN.md §3): per
+microbatch it costs one tree-axpy into the (ZeRO-sharded) grad_sum
+accumulator plus one squared-norm reduction of the mean gradient the
+optimizer already has — no per-sample work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import diversity
+from repro.models import transformer as tf
+from repro.optim import Optimizer, apply_updates
+from repro.train.state import TrainState
+from repro.utils import pytree as ptu
+
+PyTree = Any
+
+
+def _to_micro(x: jax.Array, num_micro: int, dp_size: int) -> jax.Array:
+    b = x.shape[0]
+    assert b % num_micro == 0, (b, num_micro)
+    m = b // num_micro
+    if dp_size > 1 and m % dp_size == 0 and b % (dp_size * num_micro) == 0:
+        x = x.reshape(dp_size, num_micro, m // dp_size, *x.shape[1:])
+        x = jnp.moveaxis(x, 0, 1)
+        return x.reshape(num_micro, m, *x.shape[3:])
+    return x.reshape(num_micro, m, *x.shape[1:])
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    num_micro: int,
+    *,
+    dp_size: int = 1,
+    moe_groups: int = 1,
+    diversity_on: bool = True,
+    grad_accum_dtype=jnp.float32,
+    loss_fn: Callable | None = None,
+) -> Callable[[TrainState, dict, jax.Array], tuple[TrainState, dict]]:
+    """Returns train_step(state, batch, lr) -> (state, metrics)."""
+    base_loss = loss_fn or (lambda p, b: tf.loss_fn(cfg, p, b, moe_groups=moe_groups))
+
+    def train_step(state: TrainState, batch: dict, lr: jax.Array):
+        micro = jax.tree.map(lambda x: _to_micro(x, num_micro, dp_size), batch)
+        global_batch = next(iter(jax.tree.leaves(batch))).shape[0]
+        micro_global = global_batch // num_micro
+
+        grad_fn = jax.value_and_grad(base_loss, has_aux=True)
+
+        # The microbatch scan carries ONLY (grads_acc, scalars): the diversity
+        # grad_sum += sum_j m*g_j equals B*mean_grad exactly, so that param-
+        # sized accumulator is updated once per step OUTSIDE the loop — one
+        # fewer parameter-sized loop carry (matters at 405B/1T scale). The
+        # moment estimator's Q = sum_j ||m*g_j||^2 is a scalar per microbatch
+        # and stays inside.
+        def micro_step(carry, mb):
+            grads_acc, sq_sum, loss_acc = carry
+            (loss, metrics), grads = grad_fn(state.params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), grads_acc, grads
+            )
+            if diversity_on:
+                m = jnp.float32(micro_global)
+                sq_sum = sq_sum + (m * m) * ptu.tree_sq_norm(grads)
+            return (grads_acc, sq_sum, loss_acc + loss), None
+
+        grads0 = ptu.tree_zeros_like(state.params, dtype=grad_accum_dtype)
+        zero = jnp.zeros((), jnp.float32)
+        (grads_acc, sq_sum, loss_sum), _ = jax.lax.scan(
+            micro_step, (grads0, zero, zero), micro
+        )
+        grads = jax.tree.map(lambda g: (g / num_micro), grads_acc)
+
+        div_state = state.div_state
+        if diversity_on:
+            b = jnp.float32(global_batch)
+            div_state = diversity.DiversityState(
+                grad_sum=jax.tree.map(
+                    lambda acc, g: acc + b.astype(acc.dtype) * g.astype(acc.dtype),
+                    div_state.grad_sum, grads,
+                ),
+                sq_norm_sum=div_state.sq_norm_sum + sq_sum,
+                mb_count=div_state.mb_count + num_micro,
+                sample_count=div_state.sample_count + b,
+            )
+
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params, lr)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(
+            params=params, opt_state=opt_state, div_state=div_state,
+            step=state.step + 1,
+        )
+        metrics = {
+            "loss": loss_sum / num_micro,
+            "grad_norm_sq": ptu.tree_sq_norm(grads),
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def epoch_end_host(state: TrainState, estimator: str = "moment") -> tuple[float, TrainState]:
+    """Host-side epoch boundary: read the diversity estimate, reset the
+    accumulators. Returns (Delta_hat, state-with-reset-accumulators)."""
+    delta = float(jax.jit(functools.partial(diversity.estimate, estimator=estimator))(state.div_state))
+    reset = jax.jit(diversity.reset_state)(state.div_state)
+    return delta, TrainState(state.params, state.opt_state, reset, state.step)

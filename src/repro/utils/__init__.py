@@ -1,0 +1,4 @@
+from repro.utils import pytree
+from repro.utils.logging import get_logger
+
+__all__ = ["pytree", "get_logger"]

@@ -1,0 +1,420 @@
+"""Post-SPMD HLO analysis: trip-count-aware FLOPs / HBM-bytes / collective
+accounting + the three-term roofline model.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts each while-
+loop body ONCE, but our programs put everything in loops (layer scan, micro-
+batch scan, flash-attention KV scan) — so its numbers are off by the product
+of trip counts (~100x). This module parses the optimized HLO text, builds the
+computation call graph (while bodies with parsed trip counts, fusions,
+calls), and propagates execution multipliers:
+
+  flops       2*M*N*K for every dot (+ conv), anywhere in the graph
+  hbm bytes   operand+result bytes of every top-level instruction per
+              computation (fusion interiors excluded — they live in
+              registers/VMEM), times execution count. A no-reuse roofline
+              upper bound on HBM traffic.
+  collectives operand bytes and ring-model link time per kind, times
+              execution count.
+
+Hardware model (TPU v5e, task spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-_]+)\s+\(.*->.*\{$")
+_CALL_TARGET_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-_]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = re.compile(r"_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, shape in _parse_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    is_entry: bool = False
+
+
+def _split_rhs(rhs: str) -> tuple[str, str, str]:
+    """'(f32[2],f32[]) tuple(%a, %b), meta' -> (type, opcode, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1 :].strip()
+                    break
+        else:
+            return rhs, "", ""
+    else:
+        sp = rhs.find(" ")
+        type_str, rest = rhs[:sp], rhs[sp + 1 :].strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    opcode = m.group(1) if m else rest.split("(")[0].strip()
+    return type_str, opcode, rest
+
+
+def _operand_names(rest: str, opcode: str) -> list[str]:
+    paren = rest.find("(")
+    if paren == -1:
+        return []
+    depth = 0
+    end = paren
+    for i in range(paren, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = rest[paren + 1 : end]
+    return re.findall(r"%([\w.\-_]+)", inner)
+
+
+class HloProgram:
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.entry: str | None = None
+        self.sizes: dict[str, int] = {}  # global instr name -> result bytes
+        self.shapes: dict[str, list] = {}
+        self._parse(text)
+
+    def _parse(self, text: str):
+        current: Computation | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if not stripped or stripped.startswith("//") or stripped.startswith("HloModule"):
+                continue
+            if stripped.endswith("{") and (m := _COMP_HEADER_RE.match(stripped)):
+                # computation header: `%name (params) -> type {` or `ENTRY ...`
+                name = m.group(2)
+                current = Computation(name, [], is_entry=bool(m.group(1)))
+                self.computations[name] = current
+                if m.group(1):
+                    self.entry = name
+                continue
+            if stripped == "}":
+                current = None
+                continue
+            if current is None or "=" not in stripped:
+                continue
+            lhs, _, rhs = stripped.partition(" = ")
+            lhs = lhs.strip()
+            if lhs.startswith("ROOT "):
+                lhs = lhs[5:].strip()
+            if not lhs.startswith("%") and not re.match(r"^[\w.\-_]+$", lhs):
+                continue
+            name = lhs.lstrip("%")
+            type_str, opcode, rest = _split_rhs(rhs)
+            if not opcode:
+                continue
+            instr = Instr(
+                name=name, type_str=type_str, opcode=opcode,
+                operands=_operand_names(rest, opcode), line=stripped,
+            )
+            current.instrs.append(instr)
+            self.sizes[name] = _shape_bytes(type_str)
+            self.shapes[name] = _parse_shapes(type_str)
+
+    # ------------------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if not comp:
+            return 1
+        best = 1
+        for ins in comp.instrs:
+            for c in _CONST_INT_RE.findall(ins.line):
+                best = max(best, int(c))
+        return best
+
+    def _dot_flops(self, ins: Instr) -> float:
+        # 2 * prod(result) * prod(contracting dims of lhs)
+        result_elems = 0
+        for _, shape in _parse_shapes(ins.type_str):
+            n = 1
+            for d in shape:
+                n *= d
+            result_elems += n
+        contract = 1
+        m = _DIMS_RE.search(ins.line)  # lhs_contracting_dims
+        if m and ins.operands:
+            lhs_shapes = self.shapes.get(ins.operands[0], [])
+            if lhs_shapes:
+                _, lhs_shape = lhs_shapes[0]
+                idxs = [int(i) for i in m.group(1).split(",") if i]
+                for i in idxs:
+                    if i < len(lhs_shape):
+                        contract *= lhs_shape[i]
+        return 2.0 * result_elems * contract
+
+    def _conv_flops(self, ins: Instr) -> float:
+        result_elems = 0
+        for _, shape in _parse_shapes(ins.type_str):
+            n = 1
+            for d in shape:
+                n *= d
+            result_elems += n
+        # kernel = second operand; flops = 2 * out_elems * (kernel elems / out_channels)
+        if len(ins.operands) >= 2:
+            kshapes = self.shapes.get(ins.operands[1], [])
+            if kshapes:
+                _, kshape = kshapes[0]
+                kelems = 1
+                for d in kshape:
+                    kelems *= d
+                out_ch = kshape[-1] if kshape else 1
+                return 2.0 * result_elems * max(kelems // max(out_ch, 1), 1)
+        return 2.0 * result_elems
+
+    # ------------------------------------------------------------------
+    def analyze(self) -> dict:
+        flops_memo: dict[str, float] = {}
+        coll_accum: dict[str, dict] = {}
+        bytes_total = [0.0]
+        convert_bytes = [0.0]  # pure dtype-convert traffic (CPU-backend bf16
+        # emulation artifact: TPU MXU consumes bf16 natively, so converts of
+        # weights/activations around matmuls would not exist there)
+
+        _SKIP_BYTES = {
+            "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "iota",
+        }
+
+        def _is_pure_convert(ins: Instr) -> bool:
+            if ins.opcode == "convert":
+                return True
+            return ins.opcode == "fusion" and "wrapped_convert" in ins.line
+
+        def _io_bytes(ins: Instr) -> float:
+            """HBM traffic of one instruction. Slice-wise updates/reads of big
+            buffers (scan gradient accumulators, stacked layer params, KV
+            caches) move only the slice — XLA aliases the buffer in place —
+            so counting full operand+result (naive model) inflates traffic
+            ~60x on stacked-parameter gradient accumulation:
+              * dynamic-update-slice (incl. fusions): 2x the update operand;
+              * any operand >= 32x the result (a slice-read of a loop-carried
+                buffer, e.g. one layer out of a (126, ...) stack): 2x result.
+            Genuine big reductions (loss/norm sums) are < 0.1% of traffic and
+            absorb the same cap harmlessly."""
+            opers = [self.sizes.get(o, 0) for o in ins.operands]
+            res = ins.result_bytes
+            if "dynamic-update-slice" in ins.line.split(" = ")[0] or \
+               ins.opcode == "dynamic-update-slice":
+                big = max([res] + opers)
+                small = [b for b in opers if 1024 <= b < big]
+                slice_b = min(small) if small else max(
+                    [b for b in opers if b < big] + [0])
+                return 2.0 * slice_b + sum(b for b in opers if b < 1024)
+            io = float(res)
+            for b in opers:
+                if res > 0 and b >= 32 * res:
+                    io += min(2.0 * res, b)
+                else:
+                    io += b
+            return io
+
+        def comp_cost(cname: str, mult: float, top_level: bool) -> float:
+            """Returns flops of computation; accumulates bytes+collectives
+            scaled by mult. ``top_level`` False => fusion interior (no HBM)."""
+            comp = self.computations.get(cname)
+            if comp is None:
+                return 0.0
+            flops = 0.0
+            for ins in comp.instrs:
+                op = ins.opcode
+                base = op[:-6] if op.endswith("-start") else op
+                if op.endswith("-done"):
+                    continue
+                # flops
+                if base == "dot":
+                    flops += self._dot_flops(ins)
+                elif base == "convolution":
+                    flops += self._conv_flops(ins)
+                elif base == "fusion":
+                    m = _CALL_TARGET_RE.search(ins.line)
+                    if m:
+                        flops += comp_cost(m.group(1), mult, top_level=False)
+                elif base == "while":
+                    body = cond = None
+                    for key, target in re.findall(r"(body|condition)=%?([\w.\-_]+)", ins.line):
+                        if key == "body":
+                            body = target
+                        else:
+                            cond = target
+                    trips = self.trip_count(cond) if cond else 1
+                    if body:
+                        # return value is per-execution of THIS computation, so
+                        # the body contributes trips * its per-execution flops
+                        flops += trips * comp_cost(body, mult * trips, top_level=top_level)
+                elif base in ("call", "async-start"):
+                    m = _CALL_TARGET_RE.search(ins.line)
+                    if m:
+                        flops += comp_cost(m.group(1), mult, top_level=top_level)
+                elif base == "conditional":
+                    m = _BRANCHES_RE.search(ins.line)
+                    if m:
+                        branches = re.findall(r"%?([\w.\-_]+)", m.group(1))
+                        if branches:
+                            flops += max(
+                                comp_cost(b, mult, top_level=top_level) for b in branches
+                            )
+                # collectives
+                if base in COLLECTIVE_KINDS:
+                    op_bytes = sum(self.sizes.get(o, 0) for o in ins.operands)
+                    gsize = 2
+                    gm = _GROUPS_BRACE_RE.search(ins.line)
+                    if gm:
+                        gsize = len(gm.group(1).split(","))
+                    else:
+                        gm = _GROUPS_IOTA_RE.search(ins.line)
+                        if gm:
+                            gsize = int(gm.group(2))
+                    d = coll_accum.setdefault(
+                        base, {"count": 0.0, "operand_bytes": 0.0, "time_s": 0.0}
+                    )
+                    d["count"] += mult
+                    d["operand_bytes"] += mult * op_bytes
+                    d["time_s"] += mult * _ring_time(base, op_bytes, self.sizes.get(ins.name, 0), gsize)
+                # bytes (HBM traffic model): top-level ops only
+                if top_level and base not in _SKIP_BYTES and base != "while":
+                    io = _io_bytes(ins)
+                    bytes_total[0] += mult * io
+                    if _is_pure_convert(ins):
+                        convert_bytes[0] += mult * io
+            return flops
+
+        total_flops = comp_cost(self.entry, 1.0, top_level=True) if self.entry else 0.0
+        total_coll_bytes = sum(d["operand_bytes"] for d in coll_accum.values())
+        total_coll_time = sum(d["time_s"] for d in coll_accum.values())
+        return {
+            "flops": total_flops,
+            "hbm_bytes": bytes_total[0],
+            # traffic excluding pure dtype converts (CPU bf16-emulation noise)
+            "hbm_bytes_adjusted": bytes_total[0] - convert_bytes[0],
+            "convert_bytes": convert_bytes[0],
+            "collectives": {
+                "by_kind": coll_accum,
+                "total_operand_bytes": total_coll_bytes,
+                "total_time_s": total_coll_time,
+            },
+        }
+
+    def f32_upcast_live_bytes(self) -> int:
+        """Live-buffer estimate of the CPU backend's hoisted f32 copies of
+        bf16 tensors (entry + loop-body computations). memory_analysis temp
+        bytes minus this approximates the TPU-resident footprint."""
+        total = 0
+        for comp in self.computations.values():
+            if not (comp.is_entry or "region" in comp.name):
+                continue
+            for ins in comp.instrs:
+                if ins.type_str.startswith("f32") and (
+                    ins.opcode == "convert"
+                    or (ins.opcode == "fusion" and "wrapped_convert" in ins.line)
+                ):
+                    total += ins.result_bytes
+        return total
+
+
+def _ring_time(kind: str, operand_bytes: int, result_bytes: int, n: int,
+               link_bw: float = ICI_BW) -> float:
+    n = max(n, 2)
+    ring = (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * ring * operand_bytes / link_bw
+    if kind == "all-gather":
+        return ring * max(result_bytes, operand_bytes) / link_bw
+    if kind == "reduce-scatter":
+        return ring * operand_bytes / link_bw
+    if kind == "all-to-all":
+        return ring * operand_bytes / link_bw
+    return operand_bytes / link_bw  # collective-permute
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloProgram(text).analyze()
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_time_s: float) -> dict:
+    """Three roofline terms in seconds, PER DEVICE (inputs are per-device)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_time_s,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["step_time_lower_bound_s"] = max(compute_s, memory_s, collective_time_s)
+    return terms
+
+
+def model_flops(n_params_active: float, tokens: float, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) — global, all chips."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,8 @@
+"""Pytest config. NOTE: no XLA_FLAGS here — smoke tests and benches must see
+1 device; multi-device tests spawn subprocesses that set their own flags."""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration tests")

@@ -1,0 +1,81 @@
+"""Checkpoint manager: atomicity, retention, round-trip, async."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_pytree, save_pytree
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3)},
+        "opt": {"momentum": {"w": jnp.zeros((2, 3)), "b": jnp.zeros(3)}},
+    }
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = _state()
+    save_pytree(str(tmp_path / "t"), tree)
+    loaded = load_pytree(str(tmp_path / "t"), tree)
+    for a, b in zip(
+        np.asarray(loaded["params"]["w"]), np.asarray(tree["params"]["w"])
+    ):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_load_without_target_gives_nested_dict(tmp_path):
+    save_pytree(str(tmp_path / "t"), _state())
+    loaded = load_pytree(str(tmp_path / "t"))
+    assert "params" in loaded and "w" in loaded["params"]
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _state())
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_manager_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    s = _state()
+    mgr.save(1, s, extra={"m": 128})
+    s2 = {"params": {"w": jnp.full((2, 3), 9.0), "b": jnp.ones(3)},
+          "opt": s["opt"]}
+    mgr.save(2, s2, extra={"m": 256})
+    out, extra = mgr.restore({"params": s["params"], "opt": s["opt"]}, step=1)
+    assert extra["m"] == 128
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"params": {"w": jnp.zeros((2, 3))}})
+    with pytest.raises(ValueError):
+        mgr.restore({"params": {"w": jnp.zeros((3, 3))}})
+
+
+def test_missing_leaf_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"params": {"w": jnp.zeros(3)}})
+    with pytest.raises(KeyError):
+        mgr.restore({"params": {"w": jnp.zeros(3), "extra": jnp.zeros(1)}})
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, _state())
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Tmp staging dirs must never appear as restorable steps."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(str(tmp_path / ".tmp.step_0000000099"))
+    assert mgr.latest_step() is None

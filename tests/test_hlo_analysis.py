@@ -1,0 +1,81 @@
+"""HLO analyzer: trip-count propagation, dot flops, collective accounting."""
+
+import numpy as np
+
+from repro.utils.hlo import HloProgram, model_flops, roofline_terms
+
+_SAMPLE = """\
+HloModule jit_f, is_scheduled=true, num_partitions=4
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+%body (p: (s32[], f32[8,16], f32[16,32])) -> (s32[], f32[8,16], f32[16,32]) {
+  %p = (s32[], f32[8,16]{1,0}, f32[16,32]{1,0}) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %niv = s32[] add(%iv, %one)
+  %a = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,32]{1,0} get-tuple-element(%p), index=2
+  %dot.1 = f32[8,32]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%dot.1), replica_groups=[2,2]<=[4], to_apply=%add
+  %na = f32[8,16]{1,0} slice(%ar), slice={[0:8], [0:16]}
+  ROOT %t = (s32[], f32[8,16]{1,0}, f32[16,32]{1,0}) tuple(%niv, %na, %w)
+}
+
+%cond (p: (s32[], f32[8,16], f32[16,32])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}, f32[16,32]{1,0}) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16], w: f32[16,32]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,32]{1,0} parameter(1)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}, f32[16,32]{1,0}) tuple(%zero, %a, %w)
+  %loop = (s32[], f32[8,16]{1,0}, f32[16,32]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_trip_count_scaled_flops():
+    prog = HloProgram(_SAMPLE)
+    res = prog.analyze()
+    # dot: 2*8*32*16 = 8192 flops, x5 trips = 40960
+    assert res["flops"] == 2 * 8 * 32 * 16 * 5
+
+
+def test_collective_counted_with_trips():
+    prog = HloProgram(_SAMPLE)
+    res = prog.analyze()
+    ar = res["collectives"]["by_kind"]["all-reduce"]
+    assert ar["count"] == 5
+    assert ar["operand_bytes"] == 5 * 8 * 32 * 4
+
+
+def test_group_size_parsed():
+    prog = HloProgram(_SAMPLE)
+    # iota format [2,2]<=[4] -> group size 2 -> ring factor 1/2, x2 for AR
+    res = prog.analyze()
+    ar = res["collectives"]["by_kind"]["all-reduce"]
+    expect = 5 * (2 * 0.5 * 8 * 32 * 4 / 50e9)
+    np.testing.assert_allclose(ar["time_s"], expect, rtol=1e-6)
+
+
+def test_roofline_terms():
+    t = roofline_terms(flops=197e12, hbm_bytes=819e9, collective_time_s=0.5)
+    np.testing.assert_allclose(t["compute_s"], 1.0)
+    np.testing.assert_allclose(t["memory_s"], 1.0)
+    assert t["dominant"] in ("compute_s", "memory_s")
+    assert t["step_time_lower_bound_s"] == 1.0
+
+
+def test_model_flops():
+    assert model_flops(1e9, 1e6, "train") == 6e15
+    assert model_flops(1e9, 1e6, "infer") == 2e15

@@ -1,0 +1,99 @@
+"""Batch policies + controller (paper Algorithm 1 line 11, AdaBatch baseline)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AdaBatch, AdaptiveBatchController, DiveBatch, FixedBatch, bucket, lr_rescale, step_decay
+
+
+class TestBucket:
+    @given(
+        m=st.integers(1, 100_000),
+        granule=st.sampled_from([1, 16, 128]),
+        m_max=st.sampled_from([512, 2048, 8192]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_invariants(self, m, granule, m_max):
+        out = bucket(m, granule, "pow2", m_max=m_max)
+        assert granule <= out <= max(m_max, granule)
+        # pow2 lattice: out / granule is a power of two
+        ratio = out / granule
+        assert ratio == 2 ** int(np.log2(ratio))
+
+    def test_monotone(self):
+        outs = [bucket(m, 16, "pow2", m_max=4096) for m in range(16, 5000, 7)]
+        assert all(b >= a for a, b in zip(outs, outs[1:]))
+
+
+class TestDiveBatchPolicy:
+    def test_paper_rule(self):
+        # m = min(m_max, delta * n * Delta): 0.1 * 50000 * 0.05 = 250 -> 256
+        p = DiveBatch(m0=128, m_max=2048, delta=0.1, dataset_size=50_000, granule=16)
+        assert p.on_epoch_end(0, 0.05).batch_size == 256
+
+    def test_cap_at_m_max(self):
+        p = DiveBatch(m0=128, m_max=2048, delta=1.0, dataset_size=50_000)
+        assert p.on_epoch_end(0, 0.9).batch_size == 2048
+
+    def test_can_shrink_when_not_monotone(self):
+        p = DiveBatch(m0=1024, m_max=2048, delta=0.1, dataset_size=50_000)
+        p.m = 1024
+        assert p.on_epoch_end(0, 0.01).batch_size < 1024
+
+    def test_monotone_flag(self):
+        p = DiveBatch(m0=1024, m_max=2048, delta=0.1, dataset_size=50_000, monotone=True)
+        assert p.on_epoch_end(0, 0.0001).batch_size >= 1024
+
+    def test_requires_diversity(self):
+        p = DiveBatch(m0=128, m_max=2048, delta=0.1, dataset_size=50_000)
+        with pytest.raises(ValueError):
+            p.on_epoch_end(0, None)
+
+
+class TestAdaBatchPolicy:
+    def test_doubles_on_schedule(self):
+        p = AdaBatch(m0=128, m_max=2048, resize_factor=2, resize_freq=20)
+        sizes = [p.on_epoch_end(e).batch_size for e in range(60)]
+        assert sizes[18] == 128 and sizes[19] == 256
+        assert sizes[38] == 256 and sizes[39] == 512
+        assert max(sizes) <= 2048
+
+
+class TestController:
+    def test_linear_lr_coupling(self):
+        c = AdaptiveBatchController(
+            DiveBatch(128, 4096, 1.0, 16_000, granule=16),
+            base_lr=0.1, lr_rule="linear",
+        )
+        d = c.on_epoch_end(0.9)  # jumps to m_max
+        assert d.batch_size == 4096
+        assert np.isclose(d.lr, 0.1 * 4096 / 128)
+
+    def test_step_decay(self):
+        c = AdaptiveBatchController(
+            FixedBatch(128, 128), base_lr=1.0, lr_schedule=step_decay(0.75, 2),
+        )
+        c.on_epoch_end()
+        d = c.on_epoch_end()
+        assert np.isclose(d.lr, 0.75)
+
+    def test_state_roundtrip(self):
+        c = AdaptiveBatchController(
+            DiveBatch(128, 2048, 0.1, 50_000, granule=16), base_lr=0.1, lr_rule="linear",
+        )
+        c.on_epoch_end(0.05)
+        c.on_epoch_end(0.2)
+        saved = c.state_dict()
+        c2 = AdaptiveBatchController(
+            DiveBatch(128, 2048, 0.1, 50_000, granule=16), base_lr=0.1, lr_rule="linear",
+        )
+        c2.load_state_dict(saved)
+        assert c2.batch_size == c.batch_size
+        assert c2.lr == c.lr
+        assert c2.epoch == c.epoch
+
+    def test_lr_rescale_rules(self):
+        assert lr_rescale("linear", 0.1, 128, 256) == pytest.approx(0.2)
+        assert lr_rescale("sqrt", 0.1, 128, 512) == pytest.approx(0.2)
+        assert lr_rescale("none", 0.1, 128, 512) == pytest.approx(0.1)
