@@ -1,0 +1,162 @@
+"""Sharding plans: which mesh axes carry which kind of parallelism.
+
+A ``ShardingPlan`` names the mesh axes for the four parallelism kinds the
+codebase uses:
+
+  dp    data parallelism — the batch axis of inputs/activations.
+  fsdp  parameter/optimizer-state sharding (ZeRO-style); usually the same
+        axes as ``dp``, extended with 'pod' for models that do not fit HBM.
+  tp    tensor parallelism — the hidden/vocab axis of matmul weights.
+  ep    expert parallelism — the expert axis of MoE weights/buffers.
+
+Model code never builds shardings directly.  The launch layer activates a
+plan (plus a table of named activation PartitionSpecs) with ``use_plan``;
+inside that context :func:`constrain` attaches ``with_sharding_constraint``
+to the named activations.  Outside any plan — CPU smoke tests, benchmarks,
+single-host runs — ``constrain`` is an EXACT no-op (returns its argument
+unchanged, inserts nothing into the jaxpr), which is what lets the same
+model code run everywhere.
+
+The active plan lives in a ``contextvars.ContextVar`` so nesting and
+re-entrancy behave like lexical scoping, including across exceptions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Any, Iterator, Mapping
+
+import jax
+from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+AxisNames = Any  # str | tuple[str, ...]
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Version-portable ``AbstractMesh`` constructor.
+
+    jax <= 0.4.x takes a tuple of ``(name, size)`` pairs; newer releases take
+    ``(axis_sizes, axis_names)``.  Tests and the dry-run build fake
+    production-shape meshes through this so divisibility rules can be checked
+    without 512 devices.
+    """
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Mesh + axis assignment for dp/fsdp/tp/ep parallelism."""
+
+    mesh: Any  # Mesh or AbstractMesh
+    dp: tuple[str, ...] = ("data",)
+    fsdp: tuple[str, ...] = ("data",)
+    tp: AxisNames = "model"
+    ep: tuple[str, ...] = ("data",)
+
+    def axis_size(self, axes: AxisNames) -> int:
+        """Total number of shards over ``axes`` (a name or tuple of names)."""
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    @property
+    def dp_size(self) -> int:
+        return self.axis_size(self.dp)
+
+    @property
+    def fsdp_size(self) -> int:
+        return self.axis_size(self.fsdp)
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.tp)
+
+    @property
+    def ep_size(self) -> int:
+        return self.axis_size(self.ep)
+
+
+# ---------------------------------------------------------------------------
+# Active-plan context
+# ---------------------------------------------------------------------------
+
+_ACTIVE: contextvars.ContextVar[tuple[ShardingPlan, Mapping[str, P]] | None] = (
+    contextvars.ContextVar("repro_dist_active_plan", default=None)
+)
+
+
+def current_plan() -> ShardingPlan | None:
+    """The innermost active plan, or None outside every ``use_plan``."""
+    active = _ACTIVE.get()
+    return active[0] if active is not None else None
+
+
+def current_act_specs() -> Mapping[str, P]:
+    """The activation-spec table of the innermost active plan ({} if none)."""
+    active = _ACTIVE.get()
+    return active[1] if active is not None else {}
+
+
+@contextlib.contextmanager
+def use_plan(plan: ShardingPlan,
+             act_specs: Mapping[str, P] | None = None) -> Iterator[ShardingPlan]:
+    """Activate ``plan`` (with named activation specs) for the dynamic extent
+    of the block.  Nests: the previous plan is restored on exit, also on
+    exceptions."""
+    token = _ACTIVE.set((plan, dict(act_specs or {})))
+    try:
+        yield plan
+    finally:
+        _ACTIVE.reset(token)
+
+
+def _divisible_spec(shape: tuple[int, ...], spec: P, plan: ShardingPlan) -> P | None:
+    """Drop spec entries whose axis product does not divide the dim.
+
+    ``with_sharding_constraint`` rejects uneven shardings; activation names
+    are shared across shapes (e.g. 'attn_q' applies to both the q-block and
+    kv-block layouts), so per-dim divisibility is resolved at constrain time.
+    Returns None when the spec has nothing to say about this shape.
+    """
+    entries = tuple(spec)
+    if len(entries) != len(shape):
+        return None
+    fitted = []
+    for dim, entry in zip(shape, entries):
+        if entry is None or dim % plan.axis_size(entry) != 0:
+            fitted.append(None)
+        else:
+            fitted.append(entry)
+    if all(e is None for e in fitted):
+        return None
+    return P(*fitted)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Attach the activation sharding registered under ``name``, if any.
+
+    Exact identity (the very same object, nothing added to the trace) when
+    no plan is active, the name is not in the plan's spec table, or the spec
+    cannot legally apply to ``x``'s shape.
+    """
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    plan, specs = active
+    spec = specs.get(name)
+    if spec is None:
+        return x
+    fitted = _divisible_spec(tuple(x.shape), spec, plan)
+    if fitted is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, fitted))

@@ -1,0 +1,228 @@
+"""Divisibility-aware PartitionSpec inference for parameter/state/batch/cache
+trees.
+
+Rules are SUFFIX rules over '/'-joined tree paths, so the same table covers
+``params/...``, ``opt_state/momentum/...`` and ``div_state/grad_sum/...``
+leaves — optimizer and diversity accumulators shard exactly like the
+parameters they mirror.  Stacked block parameters carry a leading repeat
+axis (always replicated); rules therefore address TRAILING dims.
+
+Every axis assignment goes through :func:`_fit_axes`, which returns the
+largest-product subset of the candidate mesh axes that divides the dim —
+an indivisible dim degrades to replication instead of erroring, and a
+multi-axis group like ``("pod", "data")`` factorises (a dim divisible by
+the 'data' size but not by pod*data still gets the 16-way shard).
+
+Layout summary (all subject to divisibility):
+
+  column-parallel kernels  (.., d_in, d_out)   d_in -> fsdp, d_out -> tp
+  row-parallel kernels     (.., d_in, d_out)   d_in -> tp,   d_out -> fsdp
+  lm_head kernel           (d, V)              V -> tp, d replicated
+  embedding                (V, d)              V -> fsdp, d -> tp
+  MoE expert weights       (.., E, d, ff)      E -> ep, contraction dim
+                                               replicated, other -> tp
+  Mamba channel params     (.., d_inner, ..)   d_inner -> tp
+  norms / biases / scalars                     replicated
+
+Batch leaves shard their leading dim over dp.  KV-cache leaves shard batch
+over dp (falling back to the SEQUENCE dim for batch-1 long-context decode)
+and kv-heads over tp (falling back to head_dim when kv_heads < tp size).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.plan import AxisNames, ShardingPlan
+from repro.utils import pytree as ptu
+
+PyTree = Any
+
+
+def _fit_axes(dim: int, axes: AxisNames, plan: ShardingPlan):
+    """Largest-product subset of ``axes`` whose shard count divides ``dim``.
+
+    Returns a PartitionSpec entry: a single axis name, a tuple of names
+    (order preserved), or None when nothing divides.  Ties prefer the
+    earliest subset, so a single exact axis beats an equal-product pair.
+    """
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a is not None)
+    best: tuple[str, ...] = ()
+    best_prod = 1
+    n = len(axes)
+    for mask in range(1, 1 << n):
+        subset = tuple(axes[i] for i in range(n) if (mask >> i) & 1)
+        prod = math.prod(plan.mesh.shape[a] for a in subset)
+        if prod > best_prod and dim > 0 and dim % prod == 0:
+            best, best_prod = subset, prod
+    if not best:
+        return None
+    return best[0] if len(best) == 1 else best
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer-state rules
+# ---------------------------------------------------------------------------
+
+# Kernels whose OUTPUT dim carries tp (input dim carries fsdp).
+_COLUMN_PARALLEL = (
+    "attn/q/kernel",
+    "attn/k/kernel",
+    "attn/v/kernel",
+    "ffn/w_gate/kernel",
+    "ffn/w_up/kernel",
+    "ffn/w_in/kernel",
+    "mamba/in_proj/kernel",
+    "mamba/dt_proj/kernel",
+    "frontend/kernel",
+)
+
+# Kernels whose INPUT dim carries tp (output dim carries fsdp).
+_ROW_PARALLEL = (
+    "attn/o/kernel",
+    "ffn/w_out/kernel",
+    "mamba/out_proj/kernel",
+)
+
+# Mamba per-channel params: the trailing-dims position of d_inner.
+_MAMBA_CHANNEL = {
+    "mamba/A_log": -2,       # (d_inner, d_state)
+    "mamba/x_proj/kernel": -2,  # (d_inner, dt_rank + 2*d_state)
+    "mamba/D": -1,           # (d_inner,)
+    "mamba/conv_kernel": -1,  # (K, d_inner)
+    "mamba/conv_bias": -1,   # (d_inner,)
+}
+
+# MoE expert tensors are raw (E, d_in, d_out) arrays (no '/kernel' level):
+# expert axis -> ep, contraction dim replicated, the other matmul dim -> tp.
+_MOE_EXPERT = {
+    "ffn/w_gate": (-3, -1),  # (E, d, ff): shard ff
+    "ffn/w_up": (-3, -1),
+    "ffn/w_out": (-3, -2),   # (E, ff, d): shard ff
+}
+
+
+def _param_entries(path: str, shape: tuple[int, ...],
+                   plan: ShardingPlan) -> list:
+    nd = len(shape)
+    ent: list = [None] * nd
+
+    def fit(i: int, axes: AxisNames) -> None:
+        if -nd <= i < nd:
+            ent[i] = _fit_axes(shape[i], axes, plan)
+
+    for suffix, (ep_i, tp_i) in _MOE_EXPERT.items():
+        if path.endswith(suffix):
+            fit(ep_i, plan.ep)
+            fit(tp_i, plan.tp)
+            return ent
+    for suffix, tp_i in _MAMBA_CHANNEL.items():
+        if path.endswith(suffix):
+            fit(tp_i, plan.tp)
+            return ent
+    if path.endswith("lm_head/kernel"):
+        fit(-1, plan.tp)
+        return ent
+    if path.endswith("embed/embedding"):
+        fit(-2, plan.fsdp)
+        fit(-1, plan.tp)
+        return ent
+    if any(path.endswith(s) for s in _COLUMN_PARALLEL) and nd >= 2:
+        fit(-2, plan.fsdp)
+        fit(-1, plan.tp)
+        return ent
+    if any(path.endswith(s) for s in _ROW_PARALLEL) and nd >= 2:
+        fit(-2, plan.tp)
+        fit(-1, plan.fsdp)
+        return ent
+    # norms, biases, router, scalar counters: replicated
+    return ent
+
+
+def infer_pspecs(tree: PyTree, plan: ShardingPlan) -> PyTree:
+    """PartitionSpec tree for a parameter or whole-train-state tree.
+
+    Leaves are anything with ``.shape`` (arrays or ShapeDtypeStructs); the
+    result has one ``PartitionSpec`` per leaf.
+    """
+
+    def rule(path: str, leaf) -> P:
+        return P(*_param_entries(path, tuple(leaf.shape), plan))
+
+    return ptu.tree_map_with_path(rule, tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(specs: PyTree, plan: ShardingPlan) -> PyTree:
+    """Input batches shard their leading (sample) dim over the dp axes."""
+
+    def rule(path: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        ent: list = [None] * len(shape)
+        ent[0] = _fit_axes(shape[0], plan.dp, plan)
+        return P(*ent)
+
+    return ptu.tree_map_with_path(rule, specs)
+
+
+def cache_pspecs(cache: PyTree, plan: ShardingPlan) -> PyTree:
+    """KV/SSM decode-cache sharding.
+
+    KV leaves are (..., B, S, KV, hd): batch -> dp, but a batch-1
+    long-context cache falls back to sharding the sequence dim over dp
+    (the cache IS the footprint there); kv_heads -> tp, falling back to
+    head_dim when the head count is smaller than the tp degree.
+    Mamba state leaves shard batch -> dp and d_inner -> tp.
+    """
+
+    def rule(path: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        ent: list = [None] * nd
+        last = path.rsplit("/", 1)[-1]
+        if last in ("k", "v") and nd >= 4:
+            b_i, s_i, kv_i, hd_i = nd - 4, nd - 3, nd - 2, nd - 1
+            dp = _fit_axes(shape[b_i], plan.dp, plan)
+            if dp is not None:
+                ent[b_i] = dp
+            else:
+                ent[s_i] = _fit_axes(shape[s_i], plan.dp, plan)
+            tp = _fit_axes(shape[kv_i], plan.tp, plan)
+            if tp is not None:
+                ent[kv_i] = tp
+            else:
+                ent[hd_i] = _fit_axes(shape[hd_i], plan.tp, plan)
+        elif last == "h" and nd >= 3:  # (..., B, d_inner, d_state)
+            ent[nd - 3] = _fit_axes(shape[nd - 3], plan.dp, plan)
+            ent[nd - 2] = _fit_axes(shape[nd - 2], plan.tp, plan)
+        elif last == "conv" and nd >= 3:  # (..., B, K-1, d_inner)
+            ent[nd - 3] = _fit_axes(shape[nd - 3], plan.dp, plan)
+            ent[nd - 1] = _fit_axes(shape[nd - 1], plan.tp, plan)
+        return P(*ent)
+
+    return ptu.tree_map_with_path(rule, cache)
+
+
+def shardings_of(pspecs: PyTree, plan: ShardingPlan) -> PyTree:
+    """NamedShardings on the plan's mesh for a PartitionSpec tree."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(plan.mesh, spec),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

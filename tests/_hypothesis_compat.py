@@ -1,0 +1,84 @@
+"""Property-test shim: the real ``hypothesis`` when installed, else a minimal
+deterministic stand-in (this container has no hypothesis and installing
+dependencies is off-limits).
+
+The stand-in covers exactly the API surface the test suite uses —
+``@given(**strategies)``, ``@settings(max_examples=, deadline=)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.  Each strategy
+yields its boundary values first (min/max, every sampled element) and then
+seeded-random draws, so every run explores the same examples.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        """boundary: deterministic first draws; draw: rng fallback."""
+
+        def __init__(self, boundary, draw):
+            self.boundary = list(boundary)
+            self.draw = draw
+
+        def example(self, i, rng):
+            if i < len(self.boundary):
+                return self.boundary[i]
+            return self.draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value],
+                lambda rng: rng.randint(min_value, max_value),
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value],
+                lambda rng: rng.uniform(min_value, max_value),
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                elements, lambda rng: elements[rng.randrange(len(elements))]
+            )
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            max_examples = getattr(fn, "_max_examples", 20)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0x5EED)
+                for i in range(max_examples):
+                    drawn = {k: s.example(i, rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest reads the signature to decide what is a fixture: hide
+            # the strategy-filled params (and the __wrapped__ pass-through).
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items() if name not in strats
+                ]
+            )
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,8 +1,43 @@
-"""Pytest config. NOTE: no XLA_FLAGS here — smoke tests and benches must see
-1 device; multi-device tests spawn subprocesses that set their own flags."""
+"""Pytest config: deterministic CPU test environment.
 
-import pytest
+XLA_FLAGS must be set BEFORE the first jax import anywhere in the test
+process — the device count locks at backend init.  Eight host devices let
+the sharding/compression tests build real multi-device meshes in-process on
+any machine; single-device code paths are unaffected (unsharded arrays live
+on device 0).  Subprocess tests (dryrun, compression's shard_map case) still
+set their own XLA_FLAGS first thing in the child.
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# XLA takes the LAST occurrence of a repeated flag: strip any pre-existing
+# device-count setting so ours actually wins, then append.
+_FLAG = "--xla_force_host_platform_device_count=8"
+_rest = " ".join(
+    f for f in os.environ.get("XLA_FLAGS", "").split()
+    if not f.startswith("--xla_force_host_platform_device_count")
+)
+os.environ["XLA_FLAGS"] = (_rest + " " + _FLAG).strip()
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration tests")
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests (subprocess / multi-device)"
+    )
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    """Make tests that reach for np.random.* deterministic per-test."""
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture
+def rng():
+    """Seeded NumPy Generator for tests that take randomness as input."""
+    return np.random.default_rng(0)

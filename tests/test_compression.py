@@ -7,6 +7,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.dist.compression import compress_leaf, init_error_state
 
@@ -33,6 +34,29 @@ def test_compress_leaf_shapes():
         err = jnp.zeros(shape, jnp.float32)
         deq, new_err = compress_leaf(g, err)
         assert deq.shape == shape and new_err.shape == shape
+
+
+def test_make_compressed_pod_mean_keeps_per_pod_residuals():
+    """Wrapper contract: mean replicated, residuals PER-POD (each pod must
+    fold its own quantization error back, or error feedback is broken)."""
+    from repro.dist.compression import make_compressed_pod_mean
+
+    mesh = jax.make_mesh((8,), ("pod",))  # conftest forces 8 host devices
+    r = np.random.default_rng(1)
+    g = jnp.asarray(r.standard_normal((8, 4, 16)), jnp.float32)  # stacked
+    grads, err = {"w": g}, init_error_state({"w": g})
+    red, new_err = jax.jit(make_compressed_pod_mean(mesh, "pod"))(grads, err)
+
+    np.testing.assert_allclose(np.asarray(red["w"]), np.asarray(g).mean(0),
+                               atol=0.05)
+    ne = np.asarray(new_err["w"])
+    assert ne.shape == g.shape
+    # each pod's residual is its own quant error: bounded by scale/2 and
+    # distinct across pods (a pod-0 broadcast would make these identical)
+    for p in range(8):
+        bound = np.abs(np.asarray(g[p])).max() / 254.0 + 1e-6
+        assert np.abs(ne[p]).max() <= bound
+    assert not np.allclose(ne[0], ne[1])
 
 
 _SUBPROCESS = r"""
@@ -64,6 +88,7 @@ print("OK", rel)
 """
 
 
+@pytest.mark.slow
 def test_multidevice_compressed_mean():
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS],

@@ -1,0 +1,103 @@
+"""repro.dist.plan: use_plan/current_plan nesting + re-entrancy, and the
+constrain() no-op contract (exact identity, nothing added to the jaxpr) when
+no plan is active."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.plan import (
+    ShardingPlan,
+    abstract_mesh,
+    constrain,
+    current_act_specs,
+    current_plan,
+    use_plan,
+)
+
+
+def _plan(tag="data"):
+    mesh = abstract_mesh((2, 4), ("pod", tag))
+    return ShardingPlan(mesh=mesh, dp=("pod", tag), fsdp=(tag,), tp=tag,
+                        ep=(tag,))
+
+
+class TestPlanContext:
+    def test_no_plan_by_default(self):
+        assert current_plan() is None
+        assert current_act_specs() == {}
+
+    def test_use_plan_sets_and_restores(self):
+        plan = _plan()
+        with use_plan(plan, {"residual": P(None)}) as active:
+            assert active is plan
+            assert current_plan() is plan
+            assert current_act_specs() == {"residual": P(None)}
+        assert current_plan() is None
+
+    def test_nesting_restores_outer(self):
+        outer, inner = _plan(), _plan("model")
+        with use_plan(outer):
+            with use_plan(inner):
+                assert current_plan() is inner
+            assert current_plan() is outer
+        assert current_plan() is None
+
+    def test_reentrant_same_plan(self):
+        plan = _plan()
+        with use_plan(plan):
+            with use_plan(plan):
+                assert current_plan() is plan
+            assert current_plan() is plan
+
+    def test_restored_after_exception(self):
+        plan = _plan()
+        with pytest.raises(RuntimeError):
+            with use_plan(plan):
+                raise RuntimeError("boom")
+        assert current_plan() is None
+
+    def test_axis_sizes(self):
+        plan = _plan()
+        assert plan.dp_size == 8
+        assert plan.tp_size == 4
+        assert plan.axis_size(None) == 1
+
+
+class TestConstrainNoOp:
+    def test_identity_without_plan(self):
+        x = jnp.arange(8.0)
+        assert constrain(x, "residual") is x
+
+    def test_identity_for_unknown_name(self):
+        x = jnp.arange(8.0)
+        with use_plan(_plan(), {"residual": P(None, None)}):
+            assert constrain(x, "not_registered") is x
+
+    def test_identity_for_rank_mismatch(self):
+        x = jnp.arange(8.0)  # 1-D vs a 3-D spec: nothing to say, exact no-op
+        with use_plan(_plan(), {"residual": P(("pod", "data"), None, "data")}):
+            assert constrain(x, "residual") is x
+
+    def test_identity_for_indivisible_dims(self):
+        x = jnp.zeros((7, 5))  # neither dim divides the 2x4 mesh axes
+        with use_plan(_plan(), {"residual": P(("pod", "data"), "data")}):
+            assert constrain(x, "residual") is x
+
+    def test_no_trace_residue_without_plan(self):
+        jaxpr = jax.make_jaxpr(lambda x: constrain(x, "residual"))(jnp.ones((4,)))
+        assert jaxpr.eqns == []  # identity: no tracer leaks, no inserted ops
+
+    def test_constraint_applies_on_real_mesh(self):
+        # conftest forces 8 host devices, so a real (8,)-mesh exists here
+        mesh = jax.make_mesh((8,), ("data",))
+        plan = ShardingPlan(mesh=mesh, dp=("data",), fsdp=("data",),
+                            tp="data", ep=("data",))
+        with use_plan(plan, {"residual": P("data")}):
+            out = jax.jit(lambda x: constrain(x, "residual"))(jnp.arange(16.0))
+        assert len(out.sharding.device_set) == 8
+        # indivisible input under the same plan degrades to a working no-op
+        with use_plan(plan, {"residual": P("data")}):
+            out = jax.jit(lambda x: constrain(x, "residual"))(jnp.arange(7.0))
+        assert out.shape == (7,)

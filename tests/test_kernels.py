@@ -99,6 +99,27 @@ def test_quantize_matches_ref(shape, dtype):
     assert (diff > 0).mean() < 0.02
 
 
+@pytest.mark.parametrize("case", range(12))
+def test_psgn_property_random_shapes(case):
+    """Property check: both Pallas factorisations agree with the pure-JAX
+    reference on randomly drawn (B, S, Din, Dout) x dtype — the diversity
+    numerator the batch controller consumes is kernel-verified, not just
+    spot-checked on hand-picked shapes."""
+    r = np.random.default_rng(1000 + case)
+    b = int(r.integers(1, 5))
+    s = int(r.integers(1, 97))
+    di = int(r.integers(1, 90))
+    do = int(r.integers(1, 90))
+    dtype = (jnp.float32, jnp.bfloat16)[case % 2]
+    x = jnp.asarray(r.standard_normal((b, s, di)), dtype)
+    d = jnp.asarray(r.standard_normal((b, s, do)), dtype)
+    want = np.asarray(ref.psgn_ref(x, d))
+    direct = np.asarray(psgn_direct(x, d, block_i=16, block_j=16, block_s=32))
+    gram = np.asarray(psgn_gram(x, d, block_si=32, block_sj=32))
+    np.testing.assert_allclose(direct, want, rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(gram, want, rtol=3e-5, atol=1e-5)
+
+
 def test_quantize_error_bound():
     x = _rand((50, 100), jnp.float32) * 10
     q, s = quantize_int8(x)

@@ -8,20 +8,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.dist.plan import ShardingPlan
-from repro.dist.sharding import batch_pspecs, cache_pspecs, infer_pspecs
+from repro.dist.plan import ShardingPlan, abstract_mesh
+from repro.dist.sharding import _fit_axes, batch_pspecs, cache_pspecs, infer_pspecs
 from repro.models import transformer as tf
 
 
 def _plan(multi=False):
     if multi:
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         return ShardingPlan(mesh=mesh, dp=("pod", "data"), fsdp=("pod", "data"),
                             tp="model", ep=("pod", "data"))
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     return ShardingPlan(mesh=mesh, dp=("data",), fsdp=("data",), tp="model",
                         ep=("data",))
 
@@ -132,3 +132,41 @@ class TestBatchCacheRules:
         }
         ps = cache_pspecs(cache, _plan())
         assert ps["pos0"]["k"] == P(None, None, "data", None, "model")
+
+
+class TestFitAxes:
+    """Divisibility resolution: the largest-product axis subset that divides
+    the dim wins; anything indivisible degrades to replication (None)."""
+
+    def test_exact_single_axis(self):
+        assert _fit_axes(32, ("data",), _plan()) == "data"
+
+    def test_prime_dim_replicates(self):
+        assert _fit_axes(7, ("data",), _plan()) is None
+        assert _fit_axes(151655, ("data",), _plan()) is None  # odd vocab
+
+    def test_prime_dim_multi_axis_replicates(self):
+        assert _fit_axes(3, ("pod", "data"), _plan(multi=True)) is None
+
+    def test_dim_smaller_than_axis_product(self):
+        plan = _plan(multi=True)  # pod=2, data=16 -> product 32
+        # 16 < 32: the 16-way 'data' axis alone divides and beats 'pod'
+        assert _fit_axes(16, ("pod", "data"), plan) == "data"
+        # 8: only the 2-way 'pod' axis divides
+        assert _fit_axes(8, ("pod", "data"), plan) == "pod"
+        # 2: exactly the pod axis
+        assert _fit_axes(2, ("pod", "data"), plan) == "pod"
+
+    def test_multi_axis_factorization(self):
+        plan = _plan(multi=True)
+        assert _fit_axes(64, ("pod", "data"), plan) == ("pod", "data")
+        assert _fit_axes(256, ("pod", "data"), plan) == ("pod", "data")
+
+    def test_zero_and_one_replicate(self):
+        plan = _plan()
+        assert _fit_axes(1, ("data",), plan) is None
+        assert _fit_axes(0, ("data",), plan) is None
+
+    def test_string_axes_accepted(self):
+        assert _fit_axes(64, "model", _plan()) == "model"
+        assert _fit_axes(9, "model", _plan()) is None

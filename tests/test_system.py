@@ -23,6 +23,10 @@ from repro.optim import sgd
 from repro.train import init_state, make_train_step
 from repro.train.loop import ModelFns, Trainer
 
+# whole-system integration runs (training loops, supervisor restarts,
+# decode sessions): excluded from the fast `-m "not slow"` lane
+pytestmark = pytest.mark.slow
+
 
 class TestPaperClaims:
     def test_convex_large_delta_ramps_to_mmax(self):
