@@ -1,0 +1,114 @@
+"""StepEngine perf trajectory: steps/sec + recompile counts, fixed vs
+adaptive batch, on the synthetic workload. Writes ``BENCH_engine.json`` at
+the repo root — the record future engine/scaling PRs regress against.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out PATH]
+
+``run(smoke=True)`` is the CI variant (seconds, not minutes); the fast test
+lane exercises it via tests/test_bench_engine.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.core import AdaptiveBatchController, make_policy
+from repro.data import sigmoid_synthetic
+from repro.models import small
+from repro.optim import sgd
+from repro.train.loop import ModelFns, Trainer
+
+_DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+
+
+def _train(method: str, *, n: int, d: int, m0: int, m_max: int, epochs: int,
+           estimator: str, seed: int = 0):
+    train, val, _ = sigmoid_synthetic(n=n, d=d, seed=seed)
+    fns = ModelFns(
+        batch_loss=small.mlp_batch_loss,
+        example_loss=small.mlp_loss,
+        metrics=lambda p, b: {"acc": small.mlp_accuracy(p, b)},
+    )
+    ctrl = AdaptiveBatchController(
+        make_policy(method, m0=m0, m_max=m_max, delta=0.08, dataset_size=n,
+                    granule=16),
+        base_lr=0.5,
+    )
+    t = Trainer(fns, small.mlp_init(jax.random.key(seed), d), sgd(momentum=0.9),
+                ctrl, train, val,
+                estimator=estimator if method == "divebatch" else "none",
+                seed=seed)
+    t0 = time.time()
+    hist = t.run(epochs, verbose=False)
+    wall = time.time() - t0
+    stats = t.engine.stats
+    steps = sum(h.steps for h in hist)
+    return {
+        "steps": steps,
+        "wall_s": round(wall, 3),
+        # end-to-end (includes epoch-boundary eval + controller work) ...
+        "steps_per_sec": round(steps / wall, 2) if wall > 0 else 0.0,
+        # ... and dispatch-only, from the engine's own accounting
+        "dispatch_steps_per_sec": round(stats.dispatch_steps_per_sec, 2),
+        "compiles": stats.compiles,
+        "compile_bound": ctrl.compile_bound,
+        "compile_s": round(stats.compile_s, 3),
+        "bucket_hits": stats.bucket_hits,
+        "bucket_misses": stats.bucket_misses,
+        "buckets": stats.buckets,
+        "donated": stats.donate,
+        "end_batch": hist[-1].batch_size,
+        "final_val_loss": round(hist[-1].val_loss, 6),
+    }
+
+
+def run(smoke: bool = False, out_path: str | None = None):
+    """Returns benchmark CSV rows; writes the JSON record as a side effect."""
+    scale = dict(n=1024, d=32, m0=32, m_max=128, epochs=2) if smoke else \
+        dict(n=8192, d=128, m0=64, m_max=1024, epochs=10)
+    fixed = _train("sgd", estimator="none", **scale)
+    adaptive = _train("divebatch", estimator="exact", **scale)
+
+    record = {
+        "workload": {"task": "synthetic-nonconvex-mlp", **scale, "smoke": smoke},
+        "fixed": fixed,
+        "adaptive": adaptive,
+    }
+    path = os.path.abspath(out_path or _DEFAULT_OUT)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    rows = []
+    for name, r in (("engine_fixed_batch", fixed), ("engine_adaptive_batch", adaptive)):
+        assert r["compiles"] <= r["compile_bound"], (name, r)
+        rows.append((
+            name,
+            1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0,
+            f"steps_per_sec={r['steps_per_sec']};compiles={r['compiles']}"
+            f"/bound{r['compile_bound']};end_batch={r['end_batch']}",
+        ))
+    rows.append((
+        "engine_adaptive_overhead", 0.0,
+        f"adaptive_vs_fixed_steps_per_sec="
+        f"{adaptive['steps_per_sec'] / max(fixed['steps_per_sec'], 1e-9):.3f};"
+        f"recompiles={adaptive['compiles']};json={os.path.basename(path)}",
+    ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=args.smoke, out_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_engine,
         bench_estimators,
         bench_kernels,
         bench_synthetic,
@@ -18,6 +19,7 @@ def main() -> None:
     )
 
     modules = [
+        ("engine", bench_engine),
         ("synthetic(fig1/2)", bench_synthetic),
         ("table1", bench_table1),
         ("table2(memory)", bench_table2_memory),

@@ -62,8 +62,12 @@ def main():
     print("\nbatch-size trajectory:",
           [h.batch_size for h in trainer2.history])
     print("diversity trajectory:  ",
-          [f"{h.diversity:.3f}" if h.diversity else "-" for h in trainer2.history])
+          [f"{h.diversity:.3f}" if h.diversity is not None else "-"
+           for h in trainer2.history])
     print("final val acc:", trainer2.history[-1].val_metrics["acc"])
+    stats = trainer2.engine.stats  # the bucketed compile cache at work
+    print(f"engine: {stats.compiles} step compiles for buckets {stats.buckets}, "
+          f"{stats.bucket_hits} cache hits, donated={stats.donate}")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ from repro.core import batch_policy, diversity
 from repro.data import TokenStream
 from repro.models import transformer as tf
 from repro.optim import sgd
-from repro.train import epoch_end_host, init_state, make_train_step
+from repro.train import StepEngine, epoch_end_host, init_state
 from repro.ckpt import CheckpointManager
 
 
@@ -68,16 +68,9 @@ def main():
     stream = TokenStream(cfg.vocab_size, seed=0)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    # one compiled step per batch bucket (powers of two over the microbatch)
-    step_cache: dict[int, callable] = {}
-
-    def get_step(global_batch: int):
-        num_micro = global_batch // args.micro_batch
-        if num_micro not in step_cache:
-            step_cache[num_micro] = jax.jit(
-                make_train_step(cfg, opt, num_micro=num_micro, diversity_on=True)
-            )
-        return step_cache[num_micro]
+    # one compiled, donated step per num_micro bucket — the same StepEngine
+    # the Trainer and the multi-pod dry-run drive
+    engine = StepEngine.for_lm(cfg, opt, micro_batch=args.micro_batch)
 
     m = batch_policy.bucket(args.m0, args.micro_batch, m_max=args.m_max)
     lr = args.lr
@@ -87,7 +80,7 @@ def main():
         batch_np = stream.batch(step, m, args.seq_len)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         t0 = time.time()
-        state, metrics = get_step(m)(state, batch, jnp.float32(lr))
+        state, metrics = engine.step(state, batch, lr)
         dt = time.time() - t0
         if (step + 1) % args.epoch_steps == 0:
             n_seen = float(state.div_state.sample_count)
@@ -103,7 +96,9 @@ def main():
         elif step % 5 == 0:
             print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} dt={dt:.2f}s batch={m}")
 
-    print(f"done. compiled buckets: {sorted(step_cache)} (num_micro values)")
+    stats = engine.stats
+    print(f"done. compiled buckets: {sorted(stats.buckets)} (num_micro values), "
+          f"{stats.compiles} compiles / {stats.steps} steps, donated={stats.donate}")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,16 @@ def bucket(m: int, granule: int, mode: str = "pow2", m_min: int = 1, m_max: int 
     return max(snapped, max(m_min, granule))
 
 
+def num_buckets(m_max: int, granule: int) -> int:
+    """Size of the pow2 bucket lattice {granule * 2^i : granule*2^i <= m_max}.
+
+    This is the hard upper bound on distinct compiled step programs any
+    adaptive run can trigger (StepEngine caches one program per bucket):
+    ``log2(m_max / granule) + 1``.
+    """
+    return int(math.log2(max(m_max // max(granule, 1), 1))) + 1
+
+
 @dataclasses.dataclass
 class PolicyInfo:
     """Bookkeeping returned by every policy step (logged + checkpointed)."""
@@ -68,6 +78,23 @@ class BatchPolicy:
 
     def on_epoch_end(self, epoch: int, diversity: float | None = None) -> PolicyInfo:
         raise NotImplementedError
+
+    @property
+    def max_buckets(self) -> int:
+        """Hard upper bound on distinct batch sizes this policy can emit.
+
+        pow2 mode: the lattice size ``log2(m_max/granule) + 1``; "none" mode:
+        every multiple of the granule up to m_max. An off-lattice ``m_min``
+        (``bucket()`` clamps below to ``max(m_min, granule)``) adds at most
+        one extra value.
+        """
+        if self.bucket_mode == "none":
+            base = max(self.m_max // max(self.granule, 1), 1)
+        else:
+            base = num_buckets(self.m_max, self.granule)
+        if getattr(self, "m_min", 1) > self.granule:
+            base += 1
+        return base
 
     # -- checkpointable state ------------------------------------------------
     def state_dict(self) -> dict:

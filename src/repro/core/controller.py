@@ -67,6 +67,13 @@ class AdaptiveBatchController:
     def needs_diversity(self) -> bool:
         return self.policy.needs_diversity
 
+    @property
+    def compile_bound(self) -> int:
+        """Max distinct step compilations this run can cost a StepEngine:
+        the policy's bucket-lattice size (pow2 default:
+        log2(m_max/granule) + 1; see BatchPolicy.max_buckets)."""
+        return self.policy.max_buckets
+
     def on_epoch_end(self, diversity: float | None = None) -> EpochDecision:
         m_old = self.policy.m
         info: PolicyInfo = self.policy.on_epoch_end(self.epoch, diversity)

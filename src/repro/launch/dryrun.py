@@ -38,7 +38,7 @@ from repro.dist.plan import use_plan  # noqa: E402
 from repro.launch.mesh import make_plan, make_production_mesh  # noqa: E402
 from repro.models import transformer as tf  # noqa: E402
 from repro.optim import sgd  # noqa: E402
-from repro.train import step as train_step_lib  # noqa: E402
+from repro.train.engine import StepEngine  # noqa: E402
 from repro.train.state import init_state  # noqa: E402
 from repro.utils import hlo as hlo_lib  # noqa: E402
 from repro.utils import pytree as ptu  # noqa: E402
@@ -105,11 +105,6 @@ def build_train(cfg, shape, plan, tuning):
     num_micro = tuning.get("num_micro", num_micro)
     moe_groups = plan.dp_size if cfg.num_experts else 1
 
-    step_fn = train_step_lib.make_train_step(
-        cfg, optimizer, num_micro, dp_size=plan.dp_size, moe_groups=moe_groups,
-        diversity_on=True, grad_accum_dtype=opt_dtype,
-    )
-
     params_specs = tf.param_specs(cfg)
     state_specs = jax.eval_shape(lambda p: init_state(p, optimizer, div_dtype), params_specs)
     state_ps = shd.infer_pspecs(state_specs, plan)
@@ -121,12 +116,15 @@ def build_train(cfg, shape, plan, tuning):
 
     lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
 
-    jitted = jax.jit(
-        step_fn,
+    # Same engine as Trainer/launch.train: one donated, bucketed step program
+    # per num_micro; the dry-run AOT-lowers the jitted fn for one bucket.
+    engine = StepEngine.for_lm(
+        cfg, optimizer, dp_size=plan.dp_size, moe_groups=moe_groups,
+        diversity_on=True, grad_accum_dtype=opt_dtype,
         in_shardings=(state_sh, batch_sh, NamedSharding(plan.mesh, P())),
         out_shardings=(state_sh, None),
-        donate_argnums=(0,),
     )
+    jitted = engine.jitted(num_micro)
     args = (state_specs, batch_specs, lr_spec)
     info = {"num_micro": num_micro, "micro_global": micro,
             "opt_dtype": str(opt_dtype.__name__ if hasattr(opt_dtype, '__name__') else opt_dtype)}

@@ -10,6 +10,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 
 import jax
@@ -18,6 +19,7 @@ import numpy as np
 
 from repro.core import AdaptiveBatchController, make_policy, step_decay
 from repro.data import imagelike_classification, sigmoid_synthetic
+from repro.dist.plan import ShardingPlan, use_plan
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
 from repro.ckpt import CheckpointManager
@@ -97,38 +99,65 @@ def main():
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--weight-decay", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dp", type=int, default=0,
+                    help="data-parallel shards; >0 activates a dist plan over "
+                         "that many local devices (same engine code path as "
+                         "the multi-pod dry-run)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable TrainState buffer donation (debugging)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=5)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--out", default=None, help="write history JSON here")
+    ap.add_argument("--out", default=None,
+                    help="write run JSON here: {'history': [epoch records], "
+                         "'engine': EngineStats}")
     args = ap.parse_args()
 
     if args.method == "oracle":
         args.estimator = "oracle"
 
-    fns, params, train, val = build_task(args.task, args.seed)
-    controller = make_controller(args, len(train))
-    trainer = Trainer(
-        fns, params, sgd(momentum=args.momentum, weight_decay=args.weight_decay),
-        controller, train, val,
-        estimator=args.estimator if args.method in ("divebatch", "oracle") else "none",
-        seed=args.seed,
-        ckpt=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
-        ckpt_every=args.ckpt_every,
-    )
-    if args.resume and trainer.ckpt:
-        trainer.resume()
-    remaining = args.epochs - trainer.cursor.epoch
-    history = trainer.run(max(remaining, 0))
+    # The CPU-test and multi-pod paths are the same engine: with --dp the
+    # whole run executes under a ShardingPlan (batches dp-sharded, GSPMD
+    # propagates into the donated step); without one, constrain() is a no-op
+    # and the identical code runs single-device.
+    plan_ctx = contextlib.nullcontext()
+    if args.dp:
+        mesh = jax.make_mesh((args.dp,), ("data",))
+        plan_ctx = use_plan(ShardingPlan(mesh=mesh))
+
+    with plan_ctx:
+        fns, params, train, val = build_task(args.task, args.seed)
+        controller = make_controller(args, len(train))
+        trainer = Trainer(
+            fns, params, sgd(momentum=args.momentum, weight_decay=args.weight_decay),
+            controller, train, val,
+            estimator=args.estimator if args.method in ("divebatch", "oracle") else "none",
+            seed=args.seed,
+            ckpt=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
+            ckpt_every=args.ckpt_every,
+            donate=not args.no_donate,
+        )
+        if args.resume and trainer.ckpt:
+            trainer.resume()
+        remaining = args.epochs - trainer.cursor.epoch
+        history = trainer.run(max(remaining, 0))
+    stats = trainer.engine.stats
     if args.out:
         import dataclasses
 
         with open(args.out, "w") as f:
-            json.dump([dataclasses.asdict(r) for r in history], f, indent=1)
+            json.dump(
+                {"history": [dataclasses.asdict(r) for r in history],
+                 "engine": stats.as_dict()},
+                f, indent=1,
+            )
     final = history[-1] if history else None
     if final:
         print(f"final: epoch={final.epoch} val_loss={final.val_loss:.4f} "
               f"metrics={final.val_metrics} batch={final.batch_size}")
+    print(f"engine: compiles={stats.compiles} (bound {controller.compile_bound}) "
+          f"hits={stats.bucket_hits} buckets={stats.buckets} "
+          f"dispatch-steps/s={stats.dispatch_steps_per_sec:.1f} donated={stats.donate}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,14 @@
+from repro.train.engine import EngineStats, ModelFns, StepEngine
 from repro.train.state import TrainState, init_state, state_specs
 from repro.train.step import epoch_end_host, make_train_step
 
-__all__ = ["TrainState", "init_state", "state_specs", "make_train_step", "epoch_end_host"]
+__all__ = [
+    "TrainState",
+    "init_state",
+    "state_specs",
+    "make_train_step",
+    "epoch_end_host",
+    "StepEngine",
+    "EngineStats",
+    "ModelFns",
+]

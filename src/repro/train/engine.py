@@ -1,0 +1,315 @@
+"""StepEngine — the single compiled training path.
+
+Every trainer in the repo (the host ``Trainer`` shell, ``launch/train.py``,
+the multi-pod dry-run, ``examples/train_lm.py``) drives this engine instead
+of building its own jits. The engine owns:
+
+  * a compile cache keyed by the power-of-2 batch/``num_micro`` bucket
+    (``core/batch_policy.bucket``): a DiveBatch run that adapts the batch
+    size across the whole lattice compiles at most
+    ``log2(m_max/granule) + 1`` step programs, and a resize back onto an
+    already-seen bucket is a cache hit (zero recompilation);
+  * buffer donation: steps are compiled with ``donate_argnums=(0,)`` on the
+    ``TrainState``, so params/optimizer/diversity buffers are updated in
+    place — the steady-state HBM footprint is one state, not two;
+  * the scan-based step from ``train/step.py::make_train_step`` with the
+    diversity tier folded inside the jit — an epoch performs no per-step
+    host transfer beyond the scalar metrics;
+  * ``EngineStats``: bucket hit/miss counts, compile count and seconds,
+    step count and wall time — the record benchmarks and tests consume.
+
+Sharding: the engine is plan-agnostic. Under ``dist.use_plan`` the caller
+passes explicit ``in_shardings``/``out_shardings`` (the dry-run does) or
+simply feeds sharded arrays and lets GSPMD propagate (the host path does);
+outside a plan everything runs single-device. The engine code is identical
+in all three cases — that is the point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.train import step as step_lib
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ModelFns:
+    """Pure functions defining a (non-LM) trainee.
+
+    batch_loss(params, batch) -> scalar mean loss
+    example_loss(params, example) -> scalar (per-sample; for exact/oracle)
+    metrics(params, batch) -> dict (e.g. accuracy)   [optional]
+    probe_loss(params, probes, batch) -> (loss, acts)  [gram tier, optional]
+    probe_specs(params, batch_size) -> probes pytree   [gram tier, optional]
+    """
+
+    batch_loss: Callable
+    example_loss: Callable | None = None
+    metrics: Callable | None = None
+    probe_loss: Callable | None = None
+    probe_specs: Callable | None = None
+
+
+def eval_fn_for(fns: ModelFns) -> Callable:
+    """The standard eval over ModelFns: (params, batch) -> (loss, metrics)."""
+
+    def eval_fn(params, batch):
+        loss = fns.batch_loss(params, batch)
+        metrics = fns.metrics(params, batch) if fns.metrics else {}
+        return loss, metrics
+
+    return eval_fn
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Observable engine behaviour (consumed by benchmarks/ and tests).
+
+    ``compiles`` counts *step* compilations — one per distinct (bucket,
+    batch-signature) pair; with a fixed batch schema (the normal case) that
+    is one per bucket, so ``compiles == len(set(buckets))`` and the policy's
+    ``max_buckets`` bound applies. ``bucket_hits``/``bucket_misses`` count
+    cache lookups; ``buckets`` lists the bucket key of each compile in order
+    (a key repeats only if the batch schema changed within a bucket).
+    """
+
+    compiles: int = 0
+    bucket_hits: int = 0
+    bucket_misses: int = 0
+    steps: int = 0
+    compile_s: float = 0.0
+    # Time spent *dispatching* steps. jax execution is async: the engine does
+    # not block on results (callers decide when to read), so this is NOT
+    # end-to-end throughput — benchmarks measure that with their own wall
+    # clock around a blocking loop (benchmarks/bench_engine.py).
+    dispatch_wall_s: float = 0.0
+    donate: bool = True
+    buckets: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def dispatch_steps_per_sec(self) -> float:
+        return self.steps / self.dispatch_wall_s if self.dispatch_wall_s > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dispatch_steps_per_sec"] = self.dispatch_steps_per_sec
+        return d
+
+
+class StepEngine:
+    """Bucketed, donation-aware compile cache around ``make_train_step``.
+
+    ``build_step(key)`` returns the (untraced) step function for one bucket
+    key; ``bucket_of(batch)`` maps a host batch to its key (default: the
+    leading dim of the first leaf, which the batch policies already snap to
+    the pow2 lattice).
+    """
+
+    def __init__(
+        self,
+        build_step: Callable[[int], Callable],
+        *,
+        bucket_of: Callable[[PyTree], int] | None = None,
+        donate: bool = True,
+        in_shardings=None,
+        out_shardings=None,
+        eval_fn: Callable | None = None,
+    ):
+        self._build = build_step
+        self._bucket_of = bucket_of or (
+            lambda batch: int(jax.tree.leaves(batch)[0].shape[0])
+        )
+        self.donate = donate
+        self._in_shardings = in_shardings
+        self._out_shardings = out_shardings
+        self._jits: dict[int, Callable] = {}
+        self._compiled: dict[tuple, Callable] = {}
+        self._eval_fn = eval_fn
+        self._eval_jit = None
+        self.stats = EngineStats(donate=donate)
+
+    # -- compile cache -------------------------------------------------------
+    def jitted(self, key: int) -> Callable:
+        """The jax.jit-wrapped step for bucket ``key`` (not yet compiled —
+        AOT callers like the dry-run lower/compile it themselves)."""
+        if key not in self._jits:
+            kwargs = {}
+            if self._in_shardings is not None:
+                kwargs["in_shardings"] = self._in_shardings
+            if self._out_shardings is not None:
+                kwargs["out_shardings"] = self._out_shardings
+            if self.donate:
+                kwargs["donate_argnums"] = (0,)
+            self._jits[key] = jax.jit(self._build(key), **kwargs)
+        return self._jits[key]
+
+    def _executable(self, key: int, state: TrainState, batch: PyTree, lr):
+        # AOT executables are shape-exact, so the cache key carries the full
+        # batch signature, not just the bucket: batches agreeing on leading
+        # dim but differing in trailing shape/dtype/structure get their own
+        # compile instead of dispatching into an incompatible executable.
+        sig = (
+            key,
+            jax.tree.structure(batch),
+            tuple((leaf.shape[1:], str(leaf.dtype)) for leaf in jax.tree.leaves(batch)),
+        )
+        if sig in self._compiled:
+            self.stats.bucket_hits += 1
+            return self._compiled[sig]
+        self.stats.bucket_misses += 1
+        t0 = time.perf_counter()
+        # AOT-compile so the compile count/time is exact, not inferred from
+        # jit retrace behaviour.
+        compiled = self.jitted(key).lower(state, batch, lr).compile()
+        self.stats.compile_s += time.perf_counter() - t0
+        self.stats.compiles += 1
+        self.stats.buckets.append(key)
+        self._compiled[sig] = compiled
+        return compiled
+
+    # -- stepping ------------------------------------------------------------
+    def step(
+        self, state: TrainState, batch: PyTree, lr
+    ) -> tuple[TrainState, dict]:
+        """One optimizer step at whatever bucket ``batch`` lands on.
+
+        Donation invalidates the buffers of the *passed-in* state — callers
+        must hold only the returned state (the Trainer does).
+        """
+        key = self._bucket_of(batch)
+        lr = jnp.asarray(lr, jnp.float32)
+        fn = self._executable(key, state, batch, lr)
+        t0 = time.perf_counter()
+        out = fn(state, batch, lr)
+        self.stats.dispatch_wall_s += time.perf_counter() - t0
+        self.stats.steps += 1
+        return out
+
+    def evaluate(self, params: PyTree, batch: PyTree):
+        """(loss, metrics) on a batch — cached jit, params NOT donated."""
+        if self._eval_fn is None:
+            raise ValueError("engine was built without an eval_fn")
+        if self._eval_jit is None:
+            self._eval_jit = jax.jit(self._eval_fn)
+        return self._eval_jit(params, batch)
+
+    def ensure_eval_fn(self, eval_fn: Callable) -> None:
+        """Install ``eval_fn(params, batch) -> (loss, metrics)`` if the engine
+        has none — lets the Trainer accept hand-built/injected engines."""
+        if self._eval_fn is None:
+            self._eval_fn = eval_fn
+
+    def reset_stats(self) -> None:
+        self.stats = EngineStats(donate=self.donate)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def for_model_fns(
+        cls,
+        fns: ModelFns,
+        optimizer: Optimizer,
+        *,
+        estimator: str = "moment",
+        diversity_on: bool = True,
+        dp_size: int = 1,
+        donate: bool = True,
+        psn_chunk: int | None = None,
+    ) -> "StepEngine":
+        """Engine over generic ``ModelFns`` (the paper's reference models).
+
+        One bucket = one global batch size; ``num_micro`` is 1, so each batch
+        is exactly one SGD step (Algorithm 1's step granularity) and the
+        compiled program is arithmetically identical to the classic
+        ``value_and_grad`` + update step.
+        """
+        track = diversity_on and estimator in ("exact", "gram", "moment")
+
+        def build(key: int) -> Callable:
+            return step_lib.make_train_step(
+                None,
+                optimizer,
+                num_micro=1,
+                dp_size=dp_size,
+                diversity_on=track,
+                loss_fn=fns.batch_loss,
+                estimator=estimator if track else "moment",
+                example_loss=fns.example_loss,
+                probe_loss=fns.probe_loss,
+                probe_specs=fns.probe_specs,
+                psn_chunk=psn_chunk,
+            )
+
+        return cls(build, donate=donate, eval_fn=eval_fn_for(fns))
+
+    @classmethod
+    def for_lm(
+        cls,
+        cfg,
+        optimizer: Optimizer,
+        *,
+        micro_batch: int | None = None,
+        dp_size: int = 1,
+        moe_groups: int = 1,
+        diversity_on: bool = True,
+        grad_accum_dtype=jnp.float32,
+        donate: bool = True,
+        in_shardings=None,
+        out_shardings=None,
+    ) -> "StepEngine":
+        """Engine over the transformer LM loss (production path).
+
+        One bucket = one ``num_micro`` (accumulation length); the microbatch
+        shape is fixed per mesh, so with ``micro_batch`` given the bucket of
+        a global batch of B sequences is ``B // micro_batch``.
+        """
+
+        def build(num_micro: int) -> Callable:
+            return step_lib.make_train_step(
+                cfg,
+                optimizer,
+                num_micro,
+                dp_size=dp_size,
+                moe_groups=moe_groups,
+                diversity_on=diversity_on,
+                grad_accum_dtype=grad_accum_dtype,
+            )
+
+        if micro_batch is None:
+            # Without a microbatch size the bucket key (num_micro) cannot be
+            # derived from a batch: AOT-only use via .jitted(num_micro).
+            def bucket_of(batch):
+                raise ValueError(
+                    "StepEngine.for_lm was built without micro_batch: use "
+                    ".jitted(num_micro) directly, or pass micro_batch= to "
+                    "enable .step()"
+                )
+        else:
+
+            def bucket_of(batch):
+                b = int(jax.tree.leaves(batch)[0].shape[0])
+                if b % micro_batch != 0:
+                    # Two shapes must never share a cache key: the per-bucket
+                    # executables are AOT-compiled and shape-exact.
+                    raise ValueError(
+                        f"global batch {b} is not a multiple of micro_batch "
+                        f"{micro_batch}; batch sizes must land on the bucket "
+                        f"lattice (core/batch_policy.bucket)"
+                    )
+                return max(b // micro_batch, 1)
+
+        return cls(
+            build,
+            bucket_of=bucket_of,
+            donate=donate,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+        )

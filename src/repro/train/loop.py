@@ -1,14 +1,17 @@
-"""Host-side epoch training loop — the paper's Algorithm 1 end to end.
+"""Host-side epoch training shell — the paper's Algorithm 1 end to end.
 
-Each mini-batch is one SGD step (exactly Algorithm 1: adapting the batch size
-changes the *step* granularity, not an accumulation length — the multi-pod
-variant in step.py is the scale adaptation of the same algorithm). Per step
-the loop:
-  1. computes the mean gradient and applies the optimizer update,
-  2. feeds the DiversityState: grad_sum += B * mean_grad, plus the estimator
-     tier's numerator statistic (exact vmap / gram probes+kernels / moment).
-At the epoch boundary the controller turns Delta_hat into the next epoch's
-batch size + learning rate (DiveBatch / AdaBatch / fixed / Oracle).
+The ``Trainer`` is a thin host loop over ``train/engine.py::StepEngine``: it
+owns only the HOST decisions — the adaptive-batch controller, the data
+cursor, checkpoint/resume, and eval cadence. All device work (the SGD step,
+the diversity-tier accumulation, buffer donation, the per-bucket compile
+cache) lives in the engine; each mini-batch is one SGD step (exactly
+Algorithm 1: adapting the batch size changes the *step* granularity), and
+the only per-step host transfer is the scalar loss.
+
+API stability: the ``Trainer`` constructor and ``run``/``run_epoch``/
+``save``/``resume`` signatures are unchanged from the pre-engine version —
+examples and downstream code keep working; ``trainer.params`` etc. are now
+read-only views of the engine-owned ``TrainState``.
 
 Checkpointing captures the FULL adaptive state; ``Trainer.resume()`` restores
 mid-training with the identical remaining trajectory (tests assert this).
@@ -18,39 +21,27 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.ckpt import CheckpointManager
 from repro.core import AdaptiveBatchController, diversity
 from repro.data import ArrayDataset, Cursor, EpochLoader
-from repro.kernels import ops as kernel_ops
-from repro.optim import Optimizer, apply_updates
-from repro.utils import pytree as ptu
+from repro.data.pipeline import put_global_batch
+from repro.dist.plan import current_plan
+from repro.optim import Optimizer
+from repro.train.engine import ModelFns, StepEngine, eval_fn_for
+from repro.train.state import TrainState, init_state
+from repro.train.step import epoch_end_host
 from repro.utils.logging import get_logger
 
 log = get_logger("train")
 
-
-@dataclasses.dataclass
-class ModelFns:
-    """Pure functions defining the trainee.
-
-    batch_loss(params, batch) -> scalar mean loss
-    example_loss(params, example) -> scalar (per-sample; for exact/oracle)
-    metrics(params, batch) -> dict (e.g. accuracy)   [optional]
-    probe_loss(params, probes, batch) -> (loss, acts)  [gram tier, optional]
-    probe_specs(params, batch_size) -> probes pytree   [gram tier, optional]
-    """
-
-    batch_loss: Callable
-    example_loss: Callable | None = None
-    metrics: Callable | None = None
-    probe_loss: Callable | None = None
-    probe_specs: Callable | None = None
+__all__ = ["ModelFns", "EpochRecord", "Trainer"]
 
 
 @dataclasses.dataclass
@@ -81,82 +72,68 @@ class Trainer:
         psn_microbatch: int = 256,
         ckpt: CheckpointManager | None = None,
         ckpt_every: int = 0,
+        donate: bool = True,
+        engine: StepEngine | None = None,
     ):
         self.fns = fns
-        self.params = params
         self.optimizer = optimizer
-        self.opt_state = optimizer.init(params)
         self.controller = controller
         self.train_data = train_data
         self.val_data = val_data
         self.estimator = estimator
         self.seed = seed
-        self.psn_microbatch = psn_microbatch
+        self.psn_microbatch = psn_microbatch  # exact-tier vmap width / oracle chunk
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.cursor = Cursor()
-        self.div_state = diversity.init_state(params)
         self.history: list[EpochRecord] = []
-        self._build_jitted()
+        # Donation invalidates the buffers passed to each step, so the state
+        # lives in exactly one place: self.state, replaced every step
+        # (init_state makes the leaves donation-ready jax Arrays).
+        self.state: TrainState = init_state(params, optimizer)
+        self._plan = current_plan()
+        self._shardings: dict[int, Any] = {}
+        self.engine = engine or StepEngine.for_model_fns(
+            fns,
+            optimizer,
+            estimator=estimator,
+            diversity_on=controller.needs_diversity,
+            dp_size=self._plan.dp_size if self._plan else 1,
+            donate=donate,
+            psn_chunk=psn_microbatch,
+        )
+        # an injected engine may lack an eval fn; the Trainer owns the fns
+        self.engine.ensure_eval_fn(eval_fn_for(fns))
+
+    # -- read-only views of the engine-owned state (API compatibility) -------
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def opt_state(self):
+        return self.state.opt_state
+
+    @property
+    def div_state(self):
+        return self.state.div_state
 
     # ------------------------------------------------------------------
-    def _build_jitted(self):
-        fns, opt = self.fns, self.optimizer
-
-        @jax.jit
-        def sgd_step(params, opt_state, batch, lr):
-            loss, grads = jax.value_and_grad(fns.batch_loss)(params, batch)
-            updates, opt_state = opt.update(grads, opt_state, params, lr)
-            return apply_updates(params, updates), opt_state, loss, grads
-
-        self._sgd_step = sgd_step
-
-        if fns.example_loss is not None:
-            self._psn_exact = jax.jit(
-                lambda p, b: jnp.sum(diversity.persample_sq_norms(fns.example_loss, p, b))
+    def _batch_sharding(self, leading: int):
+        """NamedSharding over the plan's dp axes, if one divides the batch
+        (memoized by leading dim — constant within an epoch)."""
+        if self._plan is None:
+            return None
+        if leading not in self._shardings:
+            self._shardings[leading] = (
+                NamedSharding(self._plan.mesh, P(tuple(self._plan.dp)))
+                if leading % self._plan.dp_size == 0 else None
             )
-        if fns.probe_loss is not None:
+        return self._shardings[leading]
 
-            @jax.jit
-            def psn_gram(params, batch):
-                bsz = jax.tree.leaves(batch)[0].shape[0]
-                probes = fns.probe_specs(params, bsz)
-                (loss, acts), pgrads = jax.value_and_grad(
-                    fns.probe_loss, argnums=1, has_aux=True
-                )(params, probes, batch)
-                return jnp.sum(
-                    kernel_ops.persample_sq_norm_tree(acts, pgrads, scale=float(bsz))
-                )
-
-            self._psn_gram = psn_gram
-
-        @jax.jit
-        def evaluate(params, batch):
-            loss = fns.batch_loss(params, batch)
-            metrics = fns.metrics(params, batch) if fns.metrics else {}
-            return loss, metrics
-
-        self._evaluate = evaluate
-
-        @jax.jit
-        def accumulate_div(div, grads, bsz, psn):
-            return diversity.accumulate(div, grads, bsz, psn)
-
-        self._accumulate = accumulate_div
-
-    # ------------------------------------------------------------------
-    def _persample_sq_norm_sum(self, batch) -> jax.Array | None:
-        if self.estimator == "exact":
-            total = jnp.zeros((), jnp.float32)
-            n = len(next(iter(batch.values())))
-            mb = self.psn_microbatch
-            for i in range(0, n, mb):
-                sub = {k: v[i : i + mb] for k, v in batch.items()}
-                total = total + self._psn_exact(self.params, sub)
-            return total
-        if self.estimator == "gram":
-            return self._psn_gram(self.params, batch)
-        return None  # moment / oracle / none
+    def _put(self, batch_np: dict) -> dict:
+        leading = len(next(iter(batch_np.values())))
+        return put_global_batch(batch_np, self._batch_sharding(leading))
 
     def _oracle_diversity(self) -> float:
         batches = (
@@ -167,7 +144,9 @@ class Trainer:
             )
         )
         return float(
-            diversity.dataset_diversity(self.fns.example_loss, self.params, batches)
+            diversity.dataset_diversity(
+                self.fns.example_loss, self.state.params, batches
+            )
         )
 
     # ------------------------------------------------------------------
@@ -180,18 +159,11 @@ class Trainer:
             start_batch=self.cursor.batch_index,
         )
         losses = []
-        track_div = self.estimator in ("exact", "gram", "moment") and (
-            self.controller.needs_diversity
-        )
         for batch_np in loader:
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            self.params, self.opt_state, loss, grads = self._sgd_step(
-                self.params, self.opt_state, batch, lr
+            self.state, metrics = self.engine.step(
+                self.state, self._put(batch_np), lr
             )
-            if track_div:
-                psn = self._persample_sq_norm_sum(batch)
-                self.div_state = self._accumulate(self.div_state, grads, bsz, psn)
-            losses.append(float(loss))
+            losses.append(float(metrics["loss"]))
             self.cursor.batch_index += 1
 
         # epoch boundary ------------------------------------------------
@@ -199,16 +171,18 @@ class Trainer:
         if self.controller.needs_diversity:
             if self.estimator == "oracle":
                 delta = self._oracle_diversity()
-            elif self.estimator == "moment":
-                delta = float(diversity.diversity_moment(self.div_state))
+                _, self.state = epoch_end_host(self.state, "moment")
+            elif self.estimator in ("exact", "gram", "moment"):
+                delta, self.state = epoch_end_host(self.state, self.estimator)
             else:
-                delta = float(diversity.diversity_exact(self.div_state))
+                # estimator='none' under a diversity-driven policy: degenerate
+                # but supported — the accumulators were never fed, so the
+                # estimate is 0.0 (matches the pre-engine loop).
+                delta, self.state = epoch_end_host(self.state, "exact")
         decision = self.controller.on_epoch_end(delta)
-        self.div_state = diversity.reset_state(self.div_state)
 
-        val = {k: jnp.asarray(v) for k, v in self.val_data.get(
-            np.arange(len(self.val_data))).items()}
-        val_loss, val_metrics = self._evaluate(self.params, val)
+        val = self._put(self.val_data.get(np.arange(len(self.val_data))))
+        val_loss, val_metrics = self.engine.evaluate(self.state.params, val)
         rec = EpochRecord(
             epoch=self.cursor.epoch,
             batch_size=decision.batch_size,
@@ -235,7 +209,7 @@ class Trainer:
                     "epoch %d: loss=%.4f val=%.4f metrics=%s m=%d lr=%.4g div=%s",
                     rec.epoch, rec.train_loss, rec.val_loss, rec.val_metrics,
                     rec.batch_size, rec.lr,
-                    f"{rec.diversity:.4g}" if rec.diversity else "-",
+                    f"{rec.diversity:.4g}" if rec.diversity is not None else "-",
                 )
         return self.history
 
@@ -245,14 +219,15 @@ class Trainer:
         self.ckpt.save(
             step=self.cursor.epoch,
             state={
-                "params": self.params,
-                "opt_state": self.opt_state,
-                "div_state": self.div_state,
+                "params": self.state.params,
+                "opt_state": self.state.opt_state,
+                "div_state": self.state.div_state,
             },
             extra={
                 "controller": self.controller.state_dict(),
                 "cursor": self.cursor.state_dict(),
                 "history": [dataclasses.asdict(r) for r in self.history],
+                "step": int(self.state.step),
             },
         )
 
@@ -261,12 +236,15 @@ class Trainer:
         if self.ckpt.latest_step() is None:
             return False
         out, extra = self.ckpt.restore(
-            {"params": self.params, "opt_state": self.opt_state,
-             "div_state": self.div_state}
+            {"params": self.state.params, "opt_state": self.state.opt_state,
+             "div_state": self.state.div_state}
         )
-        self.params = out["params"]
-        self.opt_state = out["opt_state"]
-        self.div_state = out["div_state"]
+        self.state = TrainState(
+            params=jax.tree.map(jnp.asarray, out["params"]),
+            opt_state=jax.tree.map(jnp.asarray, out["opt_state"]),
+            div_state=jax.tree.map(jnp.asarray, out["div_state"]),
+            step=jnp.asarray(extra.get("step", 0), jnp.int32),
+        )
         self.controller.load_state_dict(extra["controller"])
         self.cursor.load_state_dict(extra["cursor"])
         self.history = [EpochRecord(**r) for r in extra.get("history", [])]

@@ -21,6 +21,9 @@ class TrainState(NamedTuple):
 
 
 def init_state(params: PyTree, optimizer: Optimizer, div_dtype=jnp.float32) -> TrainState:
+    # Donation-ready: leaves must be jax Arrays up front — numpy leaves would
+    # be re-uploaded on every step and can never alias donated output buffers.
+    params = jax.tree.map(jnp.asarray, params)
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),

@@ -1,10 +1,23 @@
-"""The production LM train step: microbatch gradient accumulation + DiveBatch
-diversity accumulation, as one jitted program.
+"""The train step: microbatch gradient accumulation + DiveBatch diversity
+accumulation, as one jitted program. Every training path (the host ``Trainer``,
+``launch/train.py``, the multi-pod dry-run, ``examples/train_lm.py``) obtains
+its compiled steps from here via ``train/engine.py::StepEngine``.
 
 Batch-size adaptivity at scale = adapting ``num_micro`` (the accumulation
 length): the microbatch shape is fixed per mesh, the global batch is
 ``num_micro * micro_batch``, and the compile cache is keyed by the power-of-2
 ``num_micro`` bucket (core/batch_policy.bucket).
+
+All three diversity-estimator tiers run INSIDE the jitted step (``estimator``):
+
+  moment  Q += ||microbatch_sum_grad||^2 per microbatch — zero extra backward
+          work, the tier used at 7B..1T scale.
+  exact   Q += sum_i ||g_i||^2 via vmap(grad(example_loss)) over each
+          microbatch — reference semantics, O(m) memory blowup.
+  gram    Q += probe-trick per-sample norms (kernels/psgn) from one extra
+          probe-gradient pass — exact for the dense kernels that dominate.
+
+so an epoch performs no per-step host transfer beyond the scalar metrics.
 
 The microbatch re-layout ``(B, ...) -> (G, M, ...)`` is sharding-preserving:
 it splits the dp-sharded batch dim as (dp, G, M/dp), transposes, and merges
@@ -27,6 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import diversity
+from repro.kernels import ops as kernel_ops
 from repro.models import transformer as tf
 from repro.optim import Optimizer, apply_updates
 from repro.train.state import TrainState
@@ -37,9 +51,14 @@ PyTree = Any
 
 def _to_micro(x: jax.Array, num_micro: int, dp_size: int) -> jax.Array:
     b = x.shape[0]
-    assert b % num_micro == 0, (b, num_micro)
+    if b % num_micro != 0:
+        raise ValueError(
+            f"global batch {b} is not divisible by the num_micro bucket "
+            f"{num_micro}; batch sizes must land on the bucket lattice "
+            f"(core/batch_policy.bucket)"
+        )
     m = b // num_micro
-    if dp_size > 1 and m % dp_size == 0 and b % (dp_size * num_micro) == 0:
+    if dp_size > 1 and m % dp_size == 0:
         x = x.reshape(dp_size, num_micro, m // dp_size, *x.shape[1:])
         x = jnp.moveaxis(x, 0, 1)
         return x.reshape(num_micro, m, *x.shape[3:])
@@ -47,7 +66,7 @@ def _to_micro(x: jax.Array, num_micro: int, dp_size: int) -> jax.Array:
 
 
 def make_train_step(
-    cfg: ModelConfig,
+    cfg: ModelConfig | None,
     optimizer: Optimizer,
     num_micro: int,
     *,
@@ -56,9 +75,70 @@ def make_train_step(
     diversity_on: bool = True,
     grad_accum_dtype=jnp.float32,
     loss_fn: Callable | None = None,
+    has_aux: bool | None = None,
+    estimator: str = "moment",
+    example_loss: Callable | None = None,
+    probe_loss: Callable | None = None,
+    probe_specs: Callable | None = None,
+    psn_chunk: int | None = None,
 ) -> Callable[[TrainState, dict, jax.Array], tuple[TrainState, dict]]:
-    """Returns train_step(state, batch, lr) -> (state, metrics)."""
-    base_loss = loss_fn or (lambda p, b: tf.loss_fn(cfg, p, b, moe_groups=moe_groups))
+    """Returns train_step(state, batch, lr) -> (state, metrics).
+
+    ``loss_fn(params, batch)`` defaults to the transformer LM loss (``cfg``
+    required then). ``has_aux`` says whether it returns ``(loss, aux)``;
+    defaults to True for the LM loss, False for a custom scalar loss.
+
+    ``estimator`` selects the in-jit diversity tier (see module docstring):
+    "moment" needs nothing extra, "exact" needs ``example_loss(params,
+    example)``, "gram" needs ``probe_loss(params, probes, batch) -> (loss,
+    acts)`` plus ``probe_specs(params, batch_size)``.
+
+    ``psn_chunk`` bounds the exact tier's vmap width: per-sample gradients
+    are materialised ``psn_chunk`` samples at a time (peak extra memory
+    ``psn_chunk x param-size`` instead of ``microbatch x param-size``).
+    """
+    if loss_fn is None:
+        if cfg is None:
+            raise ValueError("make_train_step needs cfg or loss_fn")
+        base_loss = lambda p, b: tf.loss_fn(cfg, p, b, moe_groups=moe_groups)
+        aux = True
+    else:
+        aux = has_aux if has_aux is not None else False
+        base_loss = loss_fn if aux else (lambda p, b: (loss_fn(p, b), {}))
+    if diversity_on:
+        if estimator == "exact" and example_loss is None:
+            raise ValueError("estimator='exact' needs example_loss")
+        if estimator == "gram" and (probe_loss is None or probe_specs is None):
+            raise ValueError("estimator='gram' needs probe_loss and probe_specs")
+        if estimator not in ("exact", "gram", "moment"):
+            raise ValueError(f"unknown in-step estimator {estimator!r}")
+
+    def _micro_sq_contrib(params, mb, mean_grads, micro_global):
+        """This microbatch's contribution to DiversityState.sq_norm_sum."""
+        if estimator == "exact":
+            # Chunked so the vmap'd per-sample gradient trees never exceed
+            # psn_chunk x param-size of live memory (the loop unrolls at
+            # trace time; chunk sums accumulate in order).
+            n = jax.tree.leaves(mb)[0].shape[0]
+            chunk = min(psn_chunk or n, n)
+            total = jnp.zeros((), jnp.float32)
+            for i in range(0, n, chunk):
+                sub = jax.tree.map(lambda x: x[i : i + chunk], mb)
+                total = total + jnp.sum(
+                    diversity.persample_sq_norms(example_loss, params, sub)
+                )
+            return total
+        if estimator == "gram":
+            bsz = jax.tree.leaves(mb)[0].shape[0]
+            probes = probe_specs(params, bsz)
+            (_, acts), pgrads = jax.value_and_grad(
+                probe_loss, argnums=1, has_aux=True
+            )(params, probes, mb)
+            return jnp.sum(
+                kernel_ops.persample_sq_norm_tree(acts, pgrads, scale=float(bsz))
+            )
+        m = jnp.float32(micro_global)
+        return (m * m) * ptu.tree_sq_norm(mean_grads)
 
     def train_step(state: TrainState, batch: dict, lr: jax.Array):
         micro = jax.tree.map(lambda x: _to_micro(x, num_micro, dp_size), batch)
@@ -71,8 +151,8 @@ def make_train_step(
         # grad_sum += sum_j m*g_j equals B*mean_grad exactly, so that param-
         # sized accumulator is updated once per step OUTSIDE the loop — one
         # fewer parameter-sized loop carry (matters at 405B/1T scale). The
-        # moment estimator's Q = sum_j ||m*g_j||^2 is a scalar per microbatch
-        # and stays inside.
+        # estimator statistic Q (moment: sum_j ||m*g_j||^2; exact/gram:
+        # sum_i ||g_i||^2) is a scalar per microbatch and stays inside.
         def micro_step(carry, mb):
             grads_acc, sq_sum, loss_acc = carry
             (loss, metrics), grads = grad_fn(state.params, mb)
@@ -80,8 +160,9 @@ def make_train_step(
                 lambda a, g: a + g.astype(a.dtype), grads_acc, grads
             )
             if diversity_on:
-                m = jnp.float32(micro_global)
-                sq_sum = sq_sum + (m * m) * ptu.tree_sq_norm(grads)
+                sq_sum = sq_sum + _micro_sq_contrib(
+                    state.params, mb, grads, micro_global
+                )
             return (grads_acc, sq_sum, loss_acc + loss), None
 
         grads0 = ptu.tree_zeros_like(state.params, dtype=grad_accum_dtype)
@@ -119,9 +200,22 @@ def make_train_step(
     return train_step
 
 
+@functools.lru_cache(maxsize=None)
+def _estimate_jit(estimator: str):
+    return jax.jit(functools.partial(diversity.estimate, estimator=estimator))
+
+
+@functools.lru_cache(maxsize=None)
+def _reset_jit():
+    return jax.jit(diversity.reset_state)
+
+
 def epoch_end_host(state: TrainState, estimator: str = "moment") -> tuple[float, TrainState]:
     """Host-side epoch boundary: read the diversity estimate, reset the
-    accumulators. Returns (Delta_hat, state-with-reset-accumulators)."""
-    delta = float(jax.jit(functools.partial(diversity.estimate, estimator=estimator))(state.div_state))
-    reset = jax.jit(diversity.reset_state)(state.div_state)
+    accumulators. Returns (Delta_hat, state-with-reset-accumulators).
+
+    The jits are cached at module level — an epoch boundary costs one scalar
+    device->host transfer, never a retrace."""
+    delta = float(_estimate_jit(estimator)(state.div_state))
+    reset = _reset_jit()(state.div_state)
     return delta, TrainState(state.params, state.opt_state, reset, state.step)

@@ -1,0 +1,26 @@
+"""CI smoke for the engine benchmark: the `-m "not slow"`-safe variant runs
+in seconds and must emit a well-formed BENCH_engine.json."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_engine  # noqa: E402
+
+
+def test_bench_engine_smoke(tmp_path):
+    out = tmp_path / "BENCH_engine.json"
+    rows = bench_engine.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    for kind in ("fixed", "adaptive"):
+        r = record[kind]
+        assert r["steps_per_sec"] > 0
+        assert r["compiles"] <= r["compile_bound"]
+        assert r["donated"] is True
+    # fixed batch compiles exactly one bucket
+    assert record["fixed"]["compiles"] == 1
+    names = [name for name, _, _ in rows]
+    assert "engine_fixed_batch" in names and "engine_adaptive_batch" in names

@@ -20,7 +20,7 @@ from repro.dist.plan import ShardingPlan, use_plan
 from repro.models import transformer as tf
 from repro.optim import sgd
 from repro.train.state import init_state
-from repro.train import step as step_lib
+from repro.train.engine import StepEngine
 from repro.utils import hlo as hlo_lib
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -36,13 +36,14 @@ for arch in ["qwen2-7b", "kimi-k2-1t-a32b", "jamba-v0.1-52b"]:
     state_sh = shd.shardings_of(shd.infer_pspecs(state_specs, plan), plan)
     batch_specs = input_specs(cfg, shape)["batch"]
     batch_sh = shd.shardings_of(shd.batch_pspecs(batch_specs, plan), plan)
-    fn = step_lib.make_train_step(cfg, opt, num_micro=2, dp_size=plan.dp_size,
-                                  moe_groups=plan.dp_size if cfg.num_experts else 1)
+    # same engine path as launch/dryrun.py::build_train
+    engine = StepEngine.for_lm(cfg, opt, dp_size=plan.dp_size,
+                               moe_groups=plan.dp_size if cfg.num_experts else 1,
+                               in_shardings=(state_sh, batch_sh, None),
+                               out_shardings=(state_sh, None))
     with use_plan(plan, {"residual": P(("pod", "data"), None, "model")}):
         with mesh:
-            lowered = jax.jit(fn, in_shardings=(state_sh, batch_sh, None),
-                              out_shardings=(state_sh, None),
-                              donate_argnums=(0,)).lower(
+            lowered = engine.jitted(2).lower(
                 state_specs, batch_specs, jax.ShapeDtypeStruct((), jnp.float32))
             compiled = lowered.compile()
     mem = compiled.memory_analysis()

@@ -102,6 +102,8 @@ def test_resume_reproduces_trajectory(tmp_path):
         [h.val_loss for h in full[3:]], [h.val_loss for h in resumed], rtol=1e-5
     )
     assert [h.batch_size for h in full[3:]] == [h.batch_size for h in resumed]
+    # the step counter survives the restart (checkpointed via extra)
+    assert int(t2.state.step) == int(t_full.state.step)
 
 
 def test_oracle_estimator_runs():
