@@ -3,8 +3,33 @@ Prints ``name,us_per_call,derived`` CSV rows."""
 
 from __future__ import annotations
 
+import subprocess
 import sys
 import traceback
+
+
+def _run_elastic_subprocess():
+    """bench_elastic forces an 8-device CPU harness pre-jax-init, which must
+    not leak into the other benches' (default-device) measurements — it gets
+    its own process, exactly like the CI invocation."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_elastic"],
+        capture_output=True, text=True,
+    )
+    if proc.returncode:
+        sys.stderr.write(proc.stderr)  # surface the child's actual error
+        raise RuntimeError(
+            f"bench_elastic subprocess failed (exit {proc.returncode})"
+        )
+    for line in proc.stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            name, us, derived = parts
+            yield name, float(us), derived
+
+
+class _ElasticModule:
+    run = staticmethod(_run_elastic_subprocess)
 
 
 def main() -> None:
@@ -20,6 +45,7 @@ def main() -> None:
 
     modules = [
         ("engine", bench_engine),
+        ("elastic", _ElasticModule),
         ("synthetic(fig1/2)", bench_synthetic),
         ("table1", bench_table1),
         ("table2(memory)", bench_table2_memory),

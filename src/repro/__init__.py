@@ -7,6 +7,7 @@ Subpackages:
   optim    SGD+momentum / AdamW / schedules
   data     synthetic datasets + resumable sharded loaders
   dist     sharding plans/rules, gradient compression
+  elastic  mesh ladder + exact resharding: device footprint tracks batch size
   train    production train step + host training loop
   serve    batched prefill/decode engine
   ckpt     atomic sharded checkpoints

@@ -155,14 +155,22 @@ class CheckpointManager:
             _write()
 
     def restore(
-        self, targets: dict[str, Any], step: int | None = None
+        self, targets: dict[str, Any], step: int | None = None, plan: Any | None = None
     ) -> tuple[dict[str, Any], dict]:
+        """Restore host trees; with ``plan`` (a ``dist.ShardingPlan``), each
+        tree is placed onto the plan's inferred shardings via
+        ``elastic.reshard.place`` — checkpoints are topology-free, so a state
+        saved on one mesh rung restores onto any other."""
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = self._step_dir(step)
         out = {k: load_pytree(os.path.join(d, k), tgt) for k, tgt in targets.items()}
+        if plan is not None:
+            from repro.elastic.reshard import place  # deferred: ckpt is a leaf layer
+
+            out = {k: place(v, plan) for k, v in out.items()}
         with open(os.path.join(d, "extra.json")) as f:
             extra = json.load(f)
         return out, extra

@@ -25,7 +25,15 @@ import math
 
 
 def bucket(m: int, granule: int, mode: str = "pow2", m_min: int = 1, m_max: int | None = None) -> int:
-    """Snap a requested batch size onto the compile-friendly lattice."""
+    """Snap a requested batch size onto the compile-friendly lattice.
+
+    The result is ALWAYS a lattice point (``granule * 2^i`` in pow2 mode, a
+    multiple of the granule in "none" mode): an off-lattice ``m_min`` is
+    snapped UP to the next lattice point rather than returned verbatim, which
+    would silently add a compile bucket beyond the ``num_buckets`` bound.
+    When no lattice point exists in ``[m_min, m_max]`` the lattice wins over
+    the floor (the largest point <= m_max is returned).
+    """
     m = max(int(m), m_min, granule)
     if m_max is not None:
         m = min(m, m_max)
@@ -37,11 +45,21 @@ def bucket(m: int, granule: int, mode: str = "pow2", m_min: int = 1, m_max: int 
         snapped = granule * (2 ** int(round(math.log2(ratio))))
     else:
         raise ValueError(f"unknown bucket mode {mode!r}")
+    floor = max(m_min, granule)
+    if snapped < floor:
+        if mode == "none":
+            snapped = -(-floor // granule) * granule  # ceil to granule multiple
+        else:
+            while snapped < floor:
+                snapped *= 2
     if m_max is not None:
-        while snapped > m_max and snapped > granule:
-            snapped //= 2
-        snapped = min(snapped, m_max)
-    return max(snapped, max(m_min, granule))
+        if mode == "none":
+            snapped = min(snapped, (m_max // granule) * granule)
+            snapped = max(snapped, granule)
+        else:
+            while snapped > m_max and snapped > granule:
+                snapped //= 2
+    return snapped
 
 
 def num_buckets(m_max: int, granule: int) -> int:
@@ -84,17 +102,13 @@ class BatchPolicy:
         """Hard upper bound on distinct batch sizes this policy can emit.
 
         pow2 mode: the lattice size ``log2(m_max/granule) + 1``; "none" mode:
-        every multiple of the granule up to m_max. An off-lattice ``m_min``
-        (``bucket()`` clamps below to ``max(m_min, granule)``) adds at most
-        one extra value.
+        every multiple of the granule up to m_max. ``bucket()`` outputs are
+        always lattice points (an off-lattice ``m_min`` snaps up to the next
+        one), so the lattice size IS the bound.
         """
         if self.bucket_mode == "none":
-            base = max(self.m_max // max(self.granule, 1), 1)
-        else:
-            base = num_buckets(self.m_max, self.granule)
-        if getattr(self, "m_min", 1) > self.granule:
-            base += 1
-        return base
+            return max(self.m_max // max(self.granule, 1), 1)
+        return num_buckets(self.m_max, self.granule)
 
     # -- checkpointable state ------------------------------------------------
     def state_dict(self) -> dict:

@@ -1,4 +1,4 @@
-from repro.data.pipeline import Cursor, EpochLoader, epoch_permutation, microbatches, put_global_batch
+from repro.data.pipeline import Cursor, EpochLoader, epoch_permutation, microbatches, prefetch, put_global_batch
 from repro.data.synthetic import ArrayDataset, TokenStream, imagelike_classification, sigmoid_synthetic
 
 __all__ = [
@@ -10,5 +10,6 @@ __all__ = [
     "EpochLoader",
     "epoch_permutation",
     "microbatches",
+    "prefetch",
     "put_global_batch",
 ]

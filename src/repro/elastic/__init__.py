@@ -1,0 +1,31 @@
+"""Elastic data-parallel scaling: co-adapt the device footprint with the
+DiveBatch batch size.
+
+DiveBatch runs *start small and grow*: an early-epoch batch of 64 on a fixed
+16-wide data-parallel mesh leaves per-device microbatches of 4 (or is
+outright indivisible), while the late large-batch epochs are exactly where
+wide data parallelism pays.  This package makes the batch-size signal drive
+the *sharding plan*, not just ``num_micro``:
+
+``ladder``   ``MeshLadder`` — an ordered family of ``ShardingPlan``s over
+             nested sub-meshes of ONE physical mesh (dp widths 1 -> D,
+             model axes held fixed); ``plan_for_batch(m)`` picks the widest
+             rung whose dp width keeps the per-device microbatch >= the
+             granule.
+``reshard``  ``reshard(state, src_plan, dst_plan)`` — exact, donation-
+             friendly ``device_put`` of the full ``TrainState`` onto the
+             destination plan's inferred shardings; a strict no-op when the
+             rung is unchanged.  ``place(tree, plan)`` is the restore-time
+             variant the checkpoint layer reuses, so a checkpoint saved on
+             one rung resumes on any other.
+
+The ``StepEngine`` compile cache is keyed by ``(bucket, rung)`` (bounded by
+``num_buckets x num_rungs``; far fewer in practice since the rung is a
+function of the bucket), and the ``Trainer`` performs the rung transition at
+the same epoch boundary that resizes the batch.
+"""
+
+from repro.elastic.ladder import MeshLadder, Rung
+from repro.elastic.reshard import place, reshard, same_plan
+
+__all__ = ["MeshLadder", "Rung", "place", "reshard", "same_plan"]

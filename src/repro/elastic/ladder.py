@@ -1,0 +1,145 @@
+"""The mesh ladder: nested data-parallel sub-meshes of one physical mesh.
+
+A ``MeshLadder`` is an ordered family of ``ShardingPlan``s ("rungs") built
+from one flat device list: rung *i* spans the first ``dp_i * model`` devices
+arranged as ``(dp_i, *model_axes)``, with the dp widths a power-of-two chain
+``1 -> D`` and the model axes held fixed on every rung.  Nesting matters:
+rung *i*'s devices are a prefix of rung *j*'s for i < j, so growing the
+footprint never migrates existing shards off their device, only fans them
+out — the reshard is a pure widen/narrow.
+
+``plan_for_batch(m)`` implements the elastic policy: the widest rung whose
+dp width both divides ``m`` and keeps the per-device microbatch at least
+``granule`` samples.  Because the batch policies snap ``m`` onto the
+``granule * 2^i`` lattice (``core/batch_policy.bucket``) and the dp widths
+are powers of two, the selected rung is a pure function of the bucket — an
+adaptive run visits at most ``num_buckets`` (bucket, rung) pairs even though
+the worst-case compile bound is ``num_buckets * num_rungs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterator, Sequence
+
+import numpy as np
+
+from repro.dist.plan import ShardingPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One step of the ladder: a dp width and its sharding plan."""
+
+    index: int
+    dp: int
+    plan: ShardingPlan
+
+    @property
+    def devices(self) -> int:
+        return int(self.plan.mesh.devices.size)
+
+
+class MeshLadder:
+    """Ordered ``ShardingPlan`` family over nested sub-meshes.
+
+    Args:
+      devices: flat device list (default: ``jax.devices()``). Rung *i* uses a
+        prefix of it.
+      granule: minimum per-device microbatch a rung may leave (the batch
+        policies' lattice granule — pass the same value to both).
+      model_axes: ``((name, size), ...)`` non-dp mesh axes held fixed on
+        every rung (e.g. ``(("model", 2),)`` for 2-way tensor parallelism).
+      dp_axis: name of the data axis on every rung's mesh.
+      dp_widths: explicit dp widths (sorted, deduped); default is the full
+        power-of-two chain 1..max plus the (possibly non-pow2) maximum.
+    """
+
+    def __init__(
+        self,
+        devices: Sequence[Any] | None = None,
+        *,
+        granule: int = 1,
+        model_axes: Sequence[tuple[str, int]] = (),
+        dp_axis: str = "data",
+        dp_widths: Sequence[int] | None = None,
+    ):
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        devices = list(devices)
+        self.granule = int(granule)
+        if self.granule < 1:
+            raise ValueError(f"granule must be >= 1, got {granule}")
+        model_axes = tuple((str(n), int(s)) for n, s in model_axes)
+        model = math.prod(s for _, s in model_axes) if model_axes else 1
+        max_dp = len(devices) // model
+        if max_dp < 1:
+            raise ValueError(
+                f"{len(devices)} devices cannot carry the fixed model axes "
+                f"{model_axes} (need >= {model})"
+            )
+        if dp_widths is None:
+            dp_widths = [1 << i for i in range(max_dp.bit_length()) if 1 << i <= max_dp]
+            if dp_widths[-1] != max_dp:
+                dp_widths.append(max_dp)  # non-pow2 device counts still top out
+        widths = sorted(set(int(w) for w in dp_widths))
+        if widths[0] < 1 or widths[-1] > max_dp:
+            raise ValueError(f"dp widths {widths} out of range [1, {max_dp}]")
+
+        from jax.sharding import Mesh  # deferred: no device state at import
+
+        names = (dp_axis,) + tuple(n for n, _ in model_axes)
+        sizes = tuple(s for _, s in model_axes)
+        self.rungs: list[Rung] = []
+        for i, w in enumerate(widths):
+            devs = np.asarray(devices[: w * model], dtype=object).reshape((w,) + sizes)
+            mesh = Mesh(devs, names)
+            plan = ShardingPlan(
+                mesh=mesh,
+                dp=(dp_axis,),
+                fsdp=(dp_axis,),
+                tp=tuple(n for n, _ in model_axes) or None,
+                ep=(dp_axis,),
+            )
+            self.rungs.append(Rung(index=i, dp=w, plan=plan))
+
+    # -- selection -----------------------------------------------------------
+    def rung_for_batch(self, m: int) -> Rung:
+        """Widest rung whose dp width divides ``m`` and keeps the per-device
+        microbatch >= the granule; the narrowest rung when even that is too
+        wide (sub-granule batches run dp=1 rather than erroring)."""
+        m = int(m)
+        best = self.rungs[0]
+        for rung in self.rungs:
+            if m % rung.dp == 0 and m // rung.dp >= self.granule:
+                best = rung
+        return best
+
+    def plan_for_batch(self, m: int) -> ShardingPlan:
+        return self.rung_for_batch(m).plan
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def num_rungs(self) -> int:
+        return len(self.rungs)
+
+    @property
+    def widths(self) -> list[int]:
+        return [r.dp for r in self.rungs]
+
+    @property
+    def full(self) -> Rung:
+        """The widest rung (the fixed-mesh baseline plan)."""
+        return self.rungs[-1]
+
+    def __len__(self) -> int:
+        return len(self.rungs)
+
+    def __iter__(self) -> Iterator[Rung]:
+        return iter(self.rungs)
+
+    def __repr__(self) -> str:
+        return f"MeshLadder(dp={self.widths}, granule={self.granule})"

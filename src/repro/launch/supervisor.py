@@ -7,6 +7,13 @@ that logic in-process (the restart path is identical: fresh Trainer +
 ``resume()``), plus a step-time watchdog for straggler detection.
 
   python -m repro.launch.supervisor --epochs 12 --fail-at 4 --fail-at 8
+
+With ``--elastic`` the job runs on a ``repro.elastic`` MeshLadder: a failure
+injected after the batch has grown restarts onto a DIFFERENT (wider) rung —
+the checkpoint is topology-free and the resumed Trainer re-derives its rung
+from the restored batch size.
+
+  python -m repro.launch.supervisor --epochs 6 --fail-at 3 --elastic
 """
 
 from __future__ import annotations
@@ -16,8 +23,12 @@ import time
 
 import numpy as np
 
-from repro.ckpt import CheckpointManager
 from repro.utils.logging import get_logger
+
+# NOTE: nothing at module level may *initialize* the jax backend: main()
+# forces the CPU host-device count via XLA_FLAGS, which must be set before
+# the first device use in the process (repro.ckpt is imported lazily in
+# run_supervised for the same reason).
 
 log = get_logger("supervisor")
 
@@ -52,12 +63,21 @@ def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
     """``make_trainer(ckpt_manager)`` builds a fresh Trainer bound to the
     checkpoint directory. Failures are injected at the given epochs; each
     crash is answered with a rebuild + resume. Returns the final history."""
+    from repro.ckpt import CheckpointManager
+
     restarts = 0
     pending_failures = set(fail_at)
     while True:
         mgr = CheckpointManager(ckpt_dir, keep=3)
         trainer = make_trainer(mgr)
         trainer.resume()
+        rung = getattr(trainer, "rung", None)
+        if rung is not None:
+            # elastic restart: the checkpoint's batch size picked the rung,
+            # which after a mid-run failure is NOT the ladder's first one
+            log.info("elastic: %s on rung %d (dp=%d)",
+                     "restarted" if restarts else "starting",
+                     rung.index, rung.dp)
         watchdog = Watchdog()
         try:
             while trainer.cursor.epoch < total_epochs:
@@ -82,12 +102,28 @@ def main():
     ap.add_argument("--fail-at", type=int, action="append", default=[])
     ap.add_argument("--ckpt-dir", default="runs/supervised")
     ap.add_argument("--method", default="divebatch")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run on a repro.elastic MeshLadder: a mid-run "
+                         "failure after the batch has grown restarts onto a "
+                         "DIFFERENT (wider) rung than the run started on")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N CPU host devices (before first jax use; "
+                         "--elastic defaults to 8 so the ladder has rungs)")
     args = ap.parse_args()
+
+    ndev = args.devices or (8 if args.elastic else 0)
+    if ndev:
+        # effective until the first backend init (first device use), which in
+        # this process is the trainer build below
+        from repro.utils.xla_env import force_host_device_count
+
+        force_host_device_count(ndev)
 
     import jax
 
     from repro.core import AdaptiveBatchController, make_policy
     from repro.data import sigmoid_synthetic
+    from repro.elastic import MeshLadder
     from repro.models import small
     from repro.optim import sgd
     from repro.train.loop import ModelFns, Trainer
@@ -108,6 +144,7 @@ def main():
         return Trainer(
             fns, small.logreg_init(jax.random.key(0), 64), sgd(momentum=0.9),
             controller, train, val, estimator="exact", ckpt=mgr,
+            elastic=MeshLadder(granule=16) if args.elastic else None,
         )
 
     history = run_supervised(make_trainer, args.epochs, args.fail_at, args.ckpt_dir)

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import AdaptiveBatchController, make_policy, step_decay
 from repro.data import imagelike_classification, sigmoid_synthetic
 from repro.dist.plan import ShardingPlan, use_plan
+from repro.elastic import MeshLadder
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
 from repro.ckpt import CheckpointManager
@@ -103,6 +104,11 @@ def main():
                     help="data-parallel shards; >0 activates a dist plan over "
                          "that many local devices (same engine code path as "
                          "the multi-pod dry-run)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="co-adapt the device footprint with the batch size: "
+                         "a repro.elastic MeshLadder over --dp (default: all) "
+                         "local devices, rung transitions at the epoch "
+                         "boundaries that resize the batch")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable TrainState buffer donation (debugging)")
     ap.add_argument("--ckpt-dir", default=None)
@@ -119,9 +125,20 @@ def main():
     # The CPU-test and multi-pod paths are the same engine: with --dp the
     # whole run executes under a ShardingPlan (batches dp-sharded, GSPMD
     # propagates into the donated step); without one, constrain() is a no-op
-    # and the identical code runs single-device.
+    # and the identical code runs single-device. --elastic replaces the fixed
+    # plan with a MeshLadder: the batch-size signal drives the sharding plan,
+    # not just the step bucket.
     plan_ctx = contextlib.nullcontext()
-    if args.dp:
+    ladder = None
+    if args.elastic:
+        ndev = args.dp or len(jax.devices())
+        if ndev > len(jax.devices()):
+            raise SystemExit(
+                f"--dp {ndev} exceeds the {len(jax.devices())} available "
+                f"devices (the fixed --dp path would fail the same way)"
+            )
+        ladder = MeshLadder(jax.devices()[:ndev], granule=args.granule)
+    elif args.dp:
         mesh = jax.make_mesh((args.dp,), ("data",))
         plan_ctx = use_plan(ShardingPlan(mesh=mesh))
 
@@ -136,6 +153,7 @@ def main():
             ckpt=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
             ckpt_every=args.ckpt_every,
             donate=not args.no_donate,
+            elastic=ladder,
         )
         if args.resume and trainer.ckpt:
             trainer.resume()
@@ -158,6 +176,9 @@ def main():
     print(f"engine: compiles={stats.compiles} (bound {controller.compile_bound}) "
           f"hits={stats.bucket_hits} buckets={stats.buckets} "
           f"dispatch-steps/s={stats.dispatch_steps_per_sec:.1f} donated={stats.donate}")
+    if ladder is not None:
+        print(f"elastic: ladder dp={ladder.widths} reshards={stats.reshards} "
+              f"rungs-per-compile={stats.rungs}")
 
 
 if __name__ == "__main__":

@@ -74,12 +74,15 @@ def eval_fn_for(fns: ModelFns) -> Callable:
 class EngineStats:
     """Observable engine behaviour (consumed by benchmarks/ and tests).
 
-    ``compiles`` counts *step* compilations — one per distinct (bucket,
-    batch-signature) pair; with a fixed batch schema (the normal case) that
-    is one per bucket, so ``compiles == len(set(buckets))`` and the policy's
-    ``max_buckets`` bound applies. ``bucket_hits``/``bucket_misses`` count
-    cache lookups; ``buckets`` lists the bucket key of each compile in order
-    (a key repeats only if the batch schema changed within a bucket).
+    ``compiles`` counts *step* compilations — one per distinct (bucket, rung,
+    batch-signature) triple; with a fixed batch schema (the normal case) that
+    is one per (bucket, rung), so ``compiles == len(set(zip(buckets,
+    rungs)))`` and the policy's ``max_buckets`` bound applies per rung
+    (``max_buckets * num_rungs`` worst case, one per bucket when the rung is
+    a function of the bucket). ``bucket_hits``/``bucket_misses`` count cache
+    lookups; ``buckets`` lists the bucket key of each compile in order (a
+    key repeats only if the batch schema or rung changed within a bucket);
+    ``reshards`` counts rung transitions applied to the engine-owned state.
     """
 
     compiles: int = 0
@@ -87,6 +90,7 @@ class EngineStats:
     bucket_misses: int = 0
     steps: int = 0
     compile_s: float = 0.0
+    reshards: int = 0
     # Time spent *dispatching* steps. jax execution is async: the engine does
     # not block on results (callers decide when to read), so this is NOT
     # end-to-end throughput — benchmarks measure that with their own wall
@@ -94,6 +98,12 @@ class EngineStats:
     dispatch_wall_s: float = 0.0
     donate: bool = True
     buckets: list[int] = dataclasses.field(default_factory=list)
+    # the rung token active at each compile, parallel to ``buckets`` (all
+    # None outside elastic mode). Distinct (bucket, rung) pairs bound the
+    # compile count: num_buckets x num_rungs worst case, and exactly one per
+    # bucket when the rung is a pure function of the bucket (a MeshLadder
+    # driven by the same granule as the batch policy).
+    rungs: list = dataclasses.field(default_factory=list)
 
     @property
     def dispatch_steps_per_sec(self) -> float:
@@ -128,6 +138,13 @@ class StepEngine:
         self._bucket_of = bucket_of or (
             lambda batch: int(jax.tree.leaves(batch)[0].shape[0])
         )
+        # Elastic mode: the current ladder-rung token (any hashable; the
+        # Trainer uses the rung index). It is part of the executable cache
+        # key — AOT executables are sharding-exact, so a state resharded onto
+        # a different rung must never dispatch into another rung's program.
+        # None (the default) keys every step identically: non-elastic
+        # callers see the pure (bucket, signature) cache.
+        self.rung = None
         self.donate = donate
         self._in_shardings = in_shardings
         self._out_shardings = out_shardings
@@ -153,12 +170,14 @@ class StepEngine:
         return self._jits[key]
 
     def _executable(self, key: int, state: TrainState, batch: PyTree, lr):
-        # AOT executables are shape-exact, so the cache key carries the full
-        # batch signature, not just the bucket: batches agreeing on leading
-        # dim but differing in trailing shape/dtype/structure get their own
-        # compile instead of dispatching into an incompatible executable.
+        # AOT executables are shape- and sharding-exact, so the cache key
+        # carries the full batch signature and the rung, not just the bucket:
+        # batches agreeing on leading dim but differing in trailing shape /
+        # dtype / structure / mesh rung get their own compile instead of
+        # dispatching into an incompatible executable.
         sig = (
             key,
+            self.rung,
             jax.tree.structure(batch),
             tuple((leaf.shape[1:], str(leaf.dtype)) for leaf in jax.tree.leaves(batch)),
         )
@@ -173,6 +192,7 @@ class StepEngine:
         self.stats.compile_s += time.perf_counter() - t0
         self.stats.compiles += 1
         self.stats.buckets.append(key)
+        self.stats.rungs.append(self.rung)
         self._compiled[sig] = compiled
         return compiled
 

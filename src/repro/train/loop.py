@@ -13,6 +13,14 @@ API stability: the ``Trainer`` constructor and ``run``/``run_epoch``/
 examples and downstream code keep working; ``trainer.params`` etc. are now
 read-only views of the engine-owned ``TrainState``.
 
+Elastic mode (``elastic=MeshLadder(...)``): the ladder co-adapts the device
+footprint with the batch size — at the same epoch boundary that resizes the
+batch, the state is resharded onto the widest rung whose dp width keeps the
+per-device microbatch >= the ladder granule (``repro.elastic``), and the
+engine's compile cache keys by (bucket, rung).  The feed path double-buffers
+device transfers (``data.pipeline.prefetch``; ``prefetch=False`` reverts to
+the synchronous put-per-step loop with an identical trajectory).
+
 Checkpointing captures the FULL adaptive state; ``Trainer.resume()`` restores
 mid-training with the identical remaining trajectory (tests assert this).
 """
@@ -23,7 +31,6 @@ import dataclasses
 import time
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -31,8 +38,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ckpt import CheckpointManager
 from repro.core import AdaptiveBatchController, diversity
 from repro.data import ArrayDataset, Cursor, EpochLoader
-from repro.data.pipeline import put_global_batch
+from repro.data.pipeline import prefetch as prefetch_iter, put_global_batch
 from repro.dist.plan import current_plan
+from repro.elastic import MeshLadder, place, reshard
 from repro.optim import Optimizer
 from repro.train.engine import ModelFns, StepEngine, eval_fn_for
 from repro.train.state import TrainState, init_state
@@ -74,6 +82,8 @@ class Trainer:
         ckpt_every: int = 0,
         donate: bool = True,
         engine: StepEngine | None = None,
+        elastic: MeshLadder | None = None,
+        prefetch: bool = True,
     ):
         self.fns = fns
         self.optimizer = optimizer
@@ -92,7 +102,16 @@ class Trainer:
         # (init_state makes the leaves donation-ready jax Arrays).
         self.state: TrainState = init_state(params, optimizer)
         self._plan = current_plan()
-        self._shardings: dict[int, Any] = {}
+        if elastic is not None and self._plan is not None:
+            raise ValueError(
+                "Trainer(elastic=...) under an ambient dist plan is ambiguous: "
+                "the ladder owns the sharding plan per rung — drop the "
+                "use_plan context (or the elastic ladder)"
+            )
+        self._elastic = elastic
+        self._rung = None
+        self._prefetch = prefetch
+        self._shardings: dict[tuple[int, int], Any] = {}
         self.engine = engine or StepEngine.for_model_fns(
             fns,
             optimizer,
@@ -104,6 +123,9 @@ class Trainer:
         )
         # an injected engine may lack an eval fn; the Trainer owns the fns
         self.engine.ensure_eval_fn(eval_fn_for(fns))
+        if self._elastic is not None:
+            # initial placement: the rung for the starting batch size
+            self._ensure_rung(controller.batch_size)
 
     # -- read-only views of the engine-owned state (API compatibility) -------
     @property
@@ -118,18 +140,55 @@ class Trainer:
     def div_state(self):
         return self.state.div_state
 
+    @property
+    def rung(self):
+        """The live elastic ladder rung (None outside elastic mode)."""
+        return self._rung
+
     # ------------------------------------------------------------------
+    @property
+    def _live_plan(self):
+        """The plan batches/state live on: the elastic rung's when a ladder
+        drives the run, else the ambient dist plan (None single-device)."""
+        return self._rung.plan if self._rung is not None else self._plan
+
+    def _ensure_rung(self, batch_size: int) -> None:
+        """Elastic transition: move the state onto the ladder rung for
+        ``batch_size`` — called at the same epoch boundary that resizes the
+        batch. Strict no-op when the rung is unchanged (reshard returns the
+        identical state object)."""
+        if self._elastic is None:
+            return
+        rung = self._elastic.rung_for_batch(batch_size)
+        if self._rung is not None and rung.index == self._rung.index:
+            return
+        src = self._rung
+        # the initial placement must NOT donate: the state still aliases the
+        # caller-passed params at that point (transitions own their buffers)
+        self.state = reshard(
+            self.state, src.plan if src else None, rung.plan,
+            donate=self.engine.donate and src is not None,
+        )
+        self._rung = rung
+        self.engine.rung = rung.index
+        if src is not None:  # initial placement is not a transition
+            self.engine.stats.reshards += 1
+            log.info("elastic: rung %d -> %d (dp %d -> %d) for batch %d",
+                     src.index, rung.index, src.dp, rung.dp, batch_size)
+
     def _batch_sharding(self, leading: int):
-        """NamedSharding over the plan's dp axes, if one divides the batch
-        (memoized by leading dim — constant within an epoch)."""
-        if self._plan is None:
+        """NamedSharding over the live plan's dp axes, if one divides the
+        batch (memoized by (leading dim, rung) — constant within an epoch)."""
+        plan = self._live_plan
+        if plan is None:
             return None
-        if leading not in self._shardings:
-            self._shardings[leading] = (
-                NamedSharding(self._plan.mesh, P(tuple(self._plan.dp)))
-                if leading % self._plan.dp_size == 0 else None
+        key = (leading, self._rung.index if self._rung is not None else -1)
+        if key not in self._shardings:
+            self._shardings[key] = (
+                NamedSharding(plan.mesh, P(tuple(plan.dp)))
+                if leading % plan.dp_size == 0 else None
             )
-        return self._shardings[leading]
+        return self._shardings[key]
 
     def _put(self, batch_np: dict) -> dict:
         leading = len(next(iter(batch_np.values())))
@@ -153,16 +212,19 @@ class Trainer:
     def run_epoch(self) -> EpochRecord:
         t0 = time.time()
         bsz = self.controller.batch_size
+        self._ensure_rung(bsz)
         lr = jnp.float32(self.controller.lr)
         loader = EpochLoader(
             self.train_data, bsz, epoch=self.cursor.epoch, seed=self.seed,
             start_batch=self.cursor.batch_index,
         )
+        feed = (
+            prefetch_iter(loader, put=self._put)
+            if self._prefetch else (self._put(b) for b in loader)
+        )
         losses = []
-        for batch_np in loader:
-            self.state, metrics = self.engine.step(
-                self.state, self._put(batch_np), lr
-            )
+        for batch in feed:
+            self.state, metrics = self.engine.step(self.state, batch, lr)
             losses.append(float(metrics["loss"]))
             self.cursor.batch_index += 1
 
@@ -235,18 +297,31 @@ class Trainer:
         assert self.ckpt is not None
         if self.ckpt.latest_step() is None:
             return False
+        # Checkpoints hold logical host tensors; restore places them onto
+        # whatever plan is live (elastic.reshard.place) — a checkpoint saved
+        # on one rung resumes on any other, or on no plan at all.
         out, extra = self.ckpt.restore(
             {"params": self.state.params, "opt_state": self.state.opt_state,
              "div_state": self.state.div_state}
         )
-        self.state = TrainState(
-            params=jax.tree.map(jnp.asarray, out["params"]),
-            opt_state=jax.tree.map(jnp.asarray, out["opt_state"]),
-            div_state=jax.tree.map(jnp.asarray, out["div_state"]),
-            step=jnp.asarray(extra.get("step", 0), jnp.int32),
-        )
         self.controller.load_state_dict(extra["controller"])
         self.cursor.load_state_dict(extra["cursor"])
         self.history = [EpochRecord(**r) for r in extra.get("history", [])]
+        if self._elastic is not None:
+            # the restored batch size decides the rung, not the one this
+            # (possibly fresh) Trainer started on — pick it BEFORE placing so
+            # the state is transferred exactly once
+            rung = self._elastic.rung_for_batch(self.controller.batch_size)
+            self._rung = rung
+            self.engine.rung = rung.index
+        self.state = place(
+            TrainState(
+                params=out["params"],
+                opt_state=out["opt_state"],
+                div_state=out["div_state"],
+                step=np.asarray(extra.get("step", 0), np.int32),
+            ),
+            self._live_plan,
+        )
         log.info("resumed from epoch %d", self.cursor.epoch)
         return True

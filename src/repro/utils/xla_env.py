@@ -1,0 +1,28 @@
+"""XLA environment setup for CPU multi-device harnesses.
+
+One canonical implementation of the "force N host devices" dance used by the
+elastic benchmarks and the supervisor CLI (tests/conftest.py keeps its own
+pre-import copy because it must run before anything under ``repro`` loads).
+"""
+
+from __future__ import annotations
+
+import os
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int, platform: str = "cpu") -> None:
+    """Point XLA at ``n`` host devices.
+
+    Must run before the first jax BACKEND INIT (the first device use) in the
+    process — merely having imported jax is fine. Strips any pre-existing
+    count flag so this one wins regardless of XLA's duplicate-flag
+    precedence; a no-op on an already-initialized backend.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", platform)
+    rest = " ".join(
+        f for f in os.environ.get("XLA_FLAGS", "").split()
+        if not f.startswith(_COUNT_FLAG)
+    )
+    os.environ["XLA_FLAGS"] = (rest + f" {_COUNT_FLAG}={int(n)}").strip()

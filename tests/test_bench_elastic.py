@@ -1,0 +1,30 @@
+"""CI smoke for the elastic benchmark: the `-m "not slow"`-safe variant runs
+in seconds and must emit a well-formed BENCH_elastic.json."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_elastic  # noqa: E402
+
+
+def test_bench_elastic_smoke(tmp_path):
+    out = tmp_path / "BENCH_elastic.json"
+    rows = bench_elastic.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    for kind in ("fixed_full_mesh", "elastic"):
+        r = record[kind]
+        assert r["steps_per_sec"] > 0
+        assert r["devices"] == 8  # the conftest harness
+    el = record["elastic"]
+    assert el["ladder_dp"] == [1, 2, 4, 8]
+    assert el["compiles"] <= record["compile_bound_bucket_x_rung"]
+    assert len(el["rungs"]) == el["compiles"]
+    # the adaptive run genuinely left the first rung
+    assert len(set(el["rungs"])) >= 2
+    assert record["elastic_vs_fixed_steps_per_sec"] > 0
+    names = [name for name, _, _ in rows]
+    assert "elastic_ladder" in names and "fixed_full_mesh" in names

@@ -205,7 +205,10 @@ def test_compile_bound_tracks_bucket_mode_and_m_min():
                     granule=16, m_min=24),
         base_lr=0.5,
     )
-    assert off_lattice_min.compile_bound == 6  # lattice (5) + clamp value 24
+    # an off-lattice m_min snaps UP to the next lattice point (32), so the
+    # bound is exactly the lattice size — no extra clamp bucket
+    assert off_lattice_min.compile_bound == 5
+    assert off_lattice_min.policy.on_epoch_end(0, 0.0).batch_size == 32
 
 
 def test_trainer_accepts_injected_engine_without_eval_fn():

@@ -25,6 +25,41 @@ class TestBucket:
         outs = [bucket(m, 16, "pow2", m_max=4096) for m in range(16, 5000, 7)]
         assert all(b >= a for a, b in zip(outs, outs[1:]))
 
+    @given(
+        m=st.integers(1, 100_000),
+        granule=st.sampled_from([1, 16, 24, 128]),
+        m_min=st.integers(1, 300),
+        m_max=st.sampled_from([512, 2048, 8192]),
+        mode=st.sampled_from(["pow2", "none"]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_every_output_on_lattice_within_bounds(self, m, granule, m_min, m_max, mode):
+        """An off-lattice m_min must snap UP to the next lattice point, never
+        leak through as a bucket of its own (it would silently exceed the
+        num_buckets compile bound)."""
+        out = bucket(m, granule, mode, m_min=m_min, m_max=m_max)
+        if mode == "pow2":
+            ratio = out / granule
+            assert ratio == 2 ** int(np.log2(ratio)), (out, granule)
+        else:
+            assert out % granule == 0
+        assert out <= max(m_max, granule)
+        # the floor holds whenever a lattice point exists in [m_min, m_max]
+        if mode == "pow2":
+            pt = granule
+            while pt < max(m_min, granule):
+                pt *= 2
+        else:
+            pt = max(-(-max(m_min, granule) // granule) * granule, granule)
+        if pt <= m_max:
+            assert out >= min(m_min, pt)
+
+    def test_off_lattice_m_min_snaps_up(self):
+        assert bucket(1, 16, "pow2", m_min=24, m_max=256) == 32
+        assert bucket(1, 16, "none", m_min=24, m_max=256) == 32
+        # no lattice point in [m_min, m_max]: the lattice wins over the floor
+        assert bucket(1, 16, "pow2", m_min=250, m_max=255) == 128
+
 
 class TestDiveBatchPolicy:
     def test_paper_rule(self):

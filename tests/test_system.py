@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.ckpt import CheckpointManager
 from repro.configs import get_config
 from repro.core import AdaptiveBatchController, diversity, make_policy
 from repro.data import sigmoid_synthetic
@@ -133,6 +134,47 @@ class TestSupervisor:
                               ckpt_dir=str(tmp_path / "sup"))
         assert len(hist) == 6
         clean = run_supervised(make_trainer, total_epochs=6, fail_at=[],
+                               ckpt_dir=str(tmp_path / "clean"))
+        np.testing.assert_allclose(
+            [h.val_loss for h in hist], [h.val_loss for h in clean], rtol=1e-5
+        )
+
+    def test_elastic_restart_lands_on_different_rung(self, tmp_path):
+        """A mid-run failure after the batch has grown restarts the job onto
+        a DIFFERENT (wider) ladder rung than the run started on, with the
+        trajectory unchanged vs a crash-free elastic run."""
+        from repro.elastic import MeshLadder
+        from repro.launch.supervisor import run_supervised
+
+        train, val, _ = sigmoid_synthetic(n=1000, d=16, seed=0)
+        rungs_seen = []
+
+        def make_trainer(mgr):
+            ctrl = AdaptiveBatchController(
+                make_policy("divebatch", m0=16, m_max=256, delta=0.5,
+                            dataset_size=len(train), granule=16),
+                base_lr=1.0,
+            )
+            t = Trainer(
+                ModelFns(small.logreg_batch_loss, small.logreg_loss,
+                         lambda p, b: {"acc": small.logreg_accuracy(p, b)}),
+                small.logreg_init(jax.random.key(0), 16), sgd(momentum=0.9),
+                ctrl, train, val, estimator="exact", ckpt=mgr,
+                elastic=MeshLadder(granule=16),
+            )
+            rungs_seen.append(t.rung.index)  # rung after build (+ resume next)
+            return t
+
+        hist = run_supervised(make_trainer, total_epochs=5, fail_at=[3],
+                              ckpt_dir=str(tmp_path / "sup"))
+        assert len(hist) == 5
+        # first build starts on the m0 rung; the post-failure rebuild's
+        # resume() then re-derives a wider rung from the restored batch size
+        restarted = make_trainer(CheckpointManager(str(tmp_path / "sup")))
+        assert restarted.resume()
+        assert restarted.rung.index > rungs_seen[0]
+
+        clean = run_supervised(make_trainer, total_epochs=5, fail_at=[],
                                ckpt_dir=str(tmp_path / "clean"))
         np.testing.assert_allclose(
             [h.val_loss for h in hist], [h.val_loss for h in clean], rtol=1e-5
