@@ -34,6 +34,7 @@ class _ElasticModule:
 
 def main() -> None:
     from benchmarks import (
+        bench_adapt,
         bench_engine,
         bench_estimators,
         bench_kernels,
@@ -45,6 +46,7 @@ def main() -> None:
 
     modules = [
         ("engine", bench_engine),
+        ("adapt", bench_adapt),
         ("elastic", _ElasticModule),
         ("synthetic(fig1/2)", bench_synthetic),
         ("table1", bench_table1),

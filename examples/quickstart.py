@@ -1,8 +1,15 @@
 """Quickstart: DiveBatch end to end in ~1 minute on CPU.
 
-Trains the paper's synthetic logistic-regression task with the adaptive
-batch controller, shows the batch-size/diversity trajectory, checkpoints,
-kills the trainer, and resumes — the five core APIs in one file.
+Trains the paper's synthetic logistic-regression task with a ``repro.adapt``
+program (the composable, signal-driven adaptation API), shows the
+batch-size/diversity trajectory, checkpoints, kills the trainer, and
+resumes — the five core APIs in one file.
+
+The adaptation program replaces the old ``AdaptiveBatchController``, which
+survives only as a deprecated shim over exactly this object: policies
+observe ``Signals`` at ``Clock`` boundaries (epoch ends, every-k-steps
+ticks, injected events), and a typed ``LrCoupling`` replaces the string
+``lr_rule``/``lr_schedule`` pair.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,12 +18,26 @@ import tempfile
 
 import jax
 
+from repro.adapt import AdaptationProgram, DiveBatchPolicy, LrCoupling
 from repro.ckpt import CheckpointManager
-from repro.core import AdaptiveBatchController, make_policy, step_decay
+from repro.core import step_decay
 from repro.data import sigmoid_synthetic
 from repro.models import small
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
+
+
+def make_program():
+    """DiveBatch: m <- min(m_max, delta * n * Delta_hat), epoch cadence,
+    with the paper's background step decay on the learning rate."""
+    return AdaptationProgram(
+        DiveBatchPolicy(m0=64, m_max=2048, delta=1.0, dataset_size=8000,
+                        granule=16),
+        base_lr=2.0,
+        coupling=LrCoupling(rule="none",              # paper's main setting
+                            decay=step_decay(0.75, 20)),  # background decay
+        estimator="exact",
+    )
 
 
 def main():
@@ -29,32 +50,23 @@ def main():
         metrics=lambda p, b: {"acc": small.logreg_accuracy(p, b)},
     )
 
-    # 2. DiveBatch controller: m <- min(m_max, delta * n * Delta_hat)
-    controller = AdaptiveBatchController(
-        make_policy("divebatch", m0=64, m_max=2048, delta=1.0,
-                    dataset_size=len(train), granule=16),
-        base_lr=2.0,
-        lr_rule="none",                       # paper's main setting
-        lr_schedule=step_decay(0.75, 20),     # paper's background decay
-    )
+    # 2. the adaptation program (see make_program above)
+    program = make_program()
 
     # 3. train with checkpointing
     ckpt_dir = tempfile.mkdtemp(prefix="divebatch_quickstart_")
-    trainer = Trainer(fns, params, sgd(momentum=0.9), controller, train, val,
+    trainer = Trainer(fns, params, sgd(momentum=0.9), program, train, val,
                       estimator="exact", ckpt=CheckpointManager(ckpt_dir),
                       ckpt_every=2)
     print("== training 6 epochs ==")
     trainer.run(6)
 
     # 4. simulate a crash: rebuild everything, resume from the checkpoint
+    #    (checkpoints carry the program state — schema v2; pre-redesign v1
+    #    controller checkpoints restore through the same path)
     print("== 'crash' -> resume ==")
-    controller2 = AdaptiveBatchController(
-        make_policy("divebatch", m0=64, m_max=2048, delta=1.0,
-                    dataset_size=len(train), granule=16),
-        base_lr=2.0, lr_schedule=step_decay(0.75, 20),
-    )
     trainer2 = Trainer(fns, small.logreg_init(jax.random.key(0), 128),
-                       sgd(momentum=0.9), controller2, train, val,
+                       sgd(momentum=0.9), make_program(), train, val,
                        estimator="exact", ckpt=CheckpointManager(ckpt_dir))
     trainer2.resume()
     trainer2.run(2)

@@ -1,5 +1,12 @@
 """End-to-end LM training driver: the production train step (microbatch
-accumulation + moment-estimator DiveBatch) on a transformer LM.
+accumulation + moment-estimator adaptation) on a transformer LM.
+
+Adaptation runs through ``repro.adapt`` at STEP granularity — the streaming
+regime the old epoch-only controller could not express: a tick-fired policy
+(DiveBatch over the accumulation window, or ``--method gns`` for the
+gradient-noise-scale family) observes the in-jit accumulators every
+``--epoch-steps`` optimizer steps via ``read_signals`` (one stacked scalar
+transfer) and resizes onto the ``num_micro`` bucket lattice.
 
 Default is a CPU-friendly ~20M-param model for a quick demo; --model-100m
 selects the ~100M configuration (same code path; a few hundred steps of it
@@ -7,6 +14,7 @@ is the intended single-host run, several minutes/step on CPU — on TPU this
 is the config the dry-run lowers for 256 chips).
 
   PYTHONPATH=src python examples/train_lm.py --steps 30
+  PYTHONPATH=src python examples/train_lm.py --method gns --steps 30
   PYTHONPATH=src python examples/train_lm.py --model-100m --steps 300
 """
 
@@ -17,12 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adapt import (
+    AdaptationProgram,
+    Clock,
+    DiveBatchPolicy,
+    GradNoisePolicy,
+    read_signals,
+)
 from repro.configs.base import ModelConfig
-from repro.core import batch_policy, diversity
 from repro.data import TokenStream
 from repro.models import transformer as tf
 from repro.optim import sgd
-from repro.train import StepEngine, epoch_end_host, init_state
+from repro.train import StepEngine, init_state
 from repro.ckpt import CheckpointManager
 
 
@@ -45,6 +59,7 @@ def model_config(big: bool) -> ModelConfig:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--method", default="divebatch", choices=["divebatch", "gns"])
     ap.add_argument("--model-100m", action="store_true")
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--micro-batch", type=int, default=4)
@@ -72,27 +87,41 @@ def main():
     # the Trainer and the multi-pod dry-run drive
     engine = StepEngine.for_lm(cfg, opt, micro_batch=args.micro_batch)
 
-    m = batch_policy.bucket(args.m0, args.micro_batch, m_max=args.m_max)
-    lr = args.lr
-    # "epoch" = args.epoch_steps optimizer steps over the endless stream
-    tokens_per_epoch = None
+    # A tick-fired repro.adapt program over the step stream: DiveBatch
+    # scaled by the accumulation window (dataset_size=None -> the samples
+    # actually seen since the last reset), or the gradient-noise family.
+    if args.method == "gns":
+        policy = GradNoisePolicy(args.m0, args.m_max, granule=args.micro_batch,
+                                 alpha=1.0, on_tick=True)
+    else:
+        policy = DiveBatchPolicy(args.m0, args.m_max, delta=args.delta,
+                                 dataset_size=None, granule=args.micro_batch,
+                                 on_tick=True)
+    program = AdaptationProgram(policy, base_lr=args.lr, estimator="moment",
+                                tick_every=args.epoch_steps)
+
+    m = program.batch_size
     for step in range(args.steps):
         batch_np = stream.batch(step, m, args.seq_len)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         t0 = time.time()
-        state, metrics = engine.step(state, batch, lr)
+        state, metrics = engine.step(state, batch, program.lr)
         dt = time.time() - t0
-        if (step + 1) % args.epoch_steps == 0:
-            n_seen = float(state.div_state.sample_count)
-            delta_hat, state = epoch_end_host(state, "moment")
-            raw = args.delta * n_seen * delta_hat
-            m_new = batch_policy.bucket(int(max(raw, 1)), args.micro_batch,
-                                        m_max=args.m_max)
+        if (step + 1) % program.tick_every == 0:
+            # one stacked scalar transfer: diversity + GNS + window samples;
+            # the reset starts the next accumulation window
+            sig, state = read_signals(state, "moment", reset=True,
+                                      batch_size=m,
+                                      loss=float(metrics["loss"]))
+            program.observe(sig, Clock(epoch=step // program.tick_every,
+                                       step=step + 1, boundary="tick"))
             print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} "
-                  f"dt={dt:.2f}s  Delta={delta_hat:.4f} -> batch {m} -> {m_new}")
-            m = m_new
+                  f"dt={dt:.2f}s  Delta={sig.diversity:.4f} gns={sig.gns:.1f} "
+                  f"-> batch {m} -> {program.batch_size}")
+            m = program.batch_size
             if mgr:
-                mgr.save(step + 1, {"state": state}, extra={"batch": m, "lr": lr})
+                mgr.save(step + 1, {"state": state},
+                         extra={"program": program.state_dict()})
         elif step % 5 == 0:
             print(f"step {step+1:4d} loss={float(metrics['loss']):.4f} dt={dt:.2f}s batch={m}")
 

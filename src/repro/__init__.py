@@ -3,6 +3,9 @@
 
 Subpackages:
   core     the paper's contribution: diversity estimators + batch policies
+  adapt    signal-driven adaptation: policies/combinators/program, the
+           single path for batch/lr/estimator/rung decisions (epoch ends,
+           every-k-steps ticks, injected events)
   models   transformer zoo (dense/GQA, MoE, Mamba, hybrid, encoder), resnet
   optim    SGD+momentum / AdamW / schedules
   data     synthetic datasets + resumable sharded loaders

@@ -1,0 +1,63 @@
+"""repro.adapt — composable, signal-driven training adaptation.
+
+The single adaptation path for the repo: a policy observes
+:class:`Signals` (diversity estimate, gradient-noise scale, loss,
+throughput, events) at :class:`Clock` boundaries (epoch ends,
+every-k-steps ticks, injected events) and emits typed :class:`Decision`
+records unifying batch size, learning rate, estimator tier, and the
+elastic-ladder rung.  ``AdaptationProgram`` drives a policy against the
+clock; combinators (``Clamped`` / ``Warmup`` / ``Hysteresis`` / ``Chain`` /
+``Switch``) compose policies; :class:`LrCoupling` types the batch->lr
+coupling.  The legacy ``core.AdaptiveBatchController`` survives as a thin
+deprecated shim over an ``AdaptationProgram``.
+"""
+
+from repro.adapt.combinators import (
+    Chain,
+    Clamped,
+    Hysteresis,
+    LrCoupling,
+    Switch,
+    Warmup,
+)
+from repro.adapt.policy import (
+    AdaBatchPolicy,
+    AdaptationPolicy,
+    Decision,
+    DiveBatchPolicy,
+    FixedPolicy,
+    FromBatchPolicy,
+    GradNoisePolicy,
+    PolicyBase,
+)
+from repro.adapt.program import SCHEMA_VERSION, AdaptationProgram, Applied
+from repro.adapt.signals import (
+    Clock,
+    Signals,
+    gns_from_accumulators,
+    read_signals,
+)
+
+__all__ = [
+    "Clock",
+    "Signals",
+    "read_signals",
+    "gns_from_accumulators",
+    "Decision",
+    "AdaptationPolicy",
+    "PolicyBase",
+    "FromBatchPolicy",
+    "FixedPolicy",
+    "AdaBatchPolicy",
+    "DiveBatchPolicy",
+    "GradNoisePolicy",
+    "LrCoupling",
+    "Clamped",
+    "Warmup",
+    "Hysteresis",
+    "Chain",
+    "Switch",
+    "AdaptationProgram",
+    "Applied",
+    "SCHEMA_VERSION",
+]

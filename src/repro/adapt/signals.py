@@ -1,0 +1,175 @@
+"""Training signals for adaptation policies.
+
+``Signals`` is the record every :class:`~repro.adapt.policy.AdaptationPolicy`
+observes; ``Clock`` says *when* it is observing (epoch end, every-k-steps
+tick, or an external event such as a supervisor Watchdog flag).
+
+The device-side inputs all come from the ``DiversityState`` accumulators the
+``StepEngine`` already populates in-jit on every step (``grad_sum``,
+``sq_norm_sum``, ``mb_count``, ``sample_count``): the diversity estimate,
+the gradient-noise-scale proxy, and the sample count are computed in ONE
+cached jit that returns a stacked scalar vector, so a boundary costs at most
+one extra device->host transfer on top of the per-step loss (the epoch
+boundary's reset of the accumulators rides in the same program).
+
+Gradient-noise scale (McCandlish et al. 2018, "An Empirical Model of
+Large-Batch Training"): ``B_noise = tr(Sigma) / ||mu||^2`` where ``Sigma``
+is the per-sample gradient covariance and ``mu`` the true gradient.  The
+same unbiased small-batch/big-batch moment inversion that powers the
+``moment`` diversity tier recovers both quantities from the accumulators —
+``E||g||^2`` (small-batch norms) and ``||grad_sum||^2`` (the big-batch
+norm) — with zero additional per-step work.  This is the signal the
+Sievert-2021 / AdAdaGrad-style :class:`~repro.adapt.policy.GradNoisePolicy`
+family adapts on, at sub-epoch granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import pytree as ptu
+
+EPS = 1e-20
+
+#: boundary kinds a Clock can carry
+BOUNDARIES = ("epoch", "tick", "event")
+
+
+@dataclasses.dataclass(frozen=True)
+class Clock:
+    """When an observation happens.
+
+    epoch     the epoch the boundary belongs to (the one just finishing for
+              ``boundary='epoch'``; the running one for ticks/events).
+    step      the global optimizer-step count at the boundary (host-side
+              counter; no device sync).
+    boundary  'epoch' | 'tick' | 'event'.
+    """
+
+    epoch: int
+    step: int
+    boundary: str = "epoch"
+
+    def __post_init__(self):
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(
+                f"unknown boundary {self.boundary!r}; expected one of {BOUNDARIES}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Signals:
+    """What a policy observes at a boundary.  ``None`` = not measured.
+
+    diversity   Delta_hat over the accumulation window (DiveBatch's signal).
+    gns         gradient-noise-scale proxy tr(Sigma)/||mu||^2 over the same
+                window (GradNoisePolicy's signal).
+    loss        most recent per-step mean loss (already host-side).
+    throughput  engine dispatch steps/sec (host-side, free).
+    batch_size  the live global batch size.
+    samples     samples accumulated since the last reset (device counter,
+                rides in the same transfer as diversity/gns).
+    event       name of the external event for ``boundary='event'``.
+    """
+
+    diversity: float | None = None
+    gns: float | None = None
+    loss: float | None = None
+    throughput: float | None = None
+    batch_size: int = 0
+    samples: float = 0.0
+    event: str | None = None
+
+
+def gns_from_accumulators(div_state: Any, estimator: str = "moment") -> jax.Array:
+    """tr(Sigma)/||mu||^2 from the DiversityState accumulators (jit-safe).
+
+    Uses the same moment inversion as ``diversity.diversity_moment``: with
+    per-window statistics ``Q`` (sum of small-batch squared norms, batch size
+    ``m`` = 1 for the exact/gram tiers, the microbatch size for moment) and
+    ``R = ||grad_sum||^2``,
+
+        M  = (R - Q) / (n (n - m))      ~ ||mu||^2        (clamped >= 0)
+        E2 = Q/n - (m - 1) M            ~ E||g||^2        (clamped >= eps)
+        tr(Sigma) = E2 - M
+
+    Degenerate windows (single small batch, or empty accumulators) return 0.
+    """
+    n = jnp.maximum(div_state.sample_count, 1.0)
+    if estimator in ("exact", "gram"):
+        m = jnp.float32(1.0)
+    else:
+        m = n / jnp.maximum(div_state.mb_count, 1.0)
+    Q = div_state.sq_norm_sum
+    R = ptu.tree_sq_norm(div_state.grad_sum)
+    M = jnp.maximum((R - Q) / jnp.maximum(n * (n - m), EPS), 0.0)
+    E2 = jnp.maximum(Q / n - (m - 1.0) * M, EPS)
+    tr_sigma = jnp.maximum(E2 - M, 0.0)
+    gns = tr_sigma / jnp.maximum(M, EPS)
+    degenerate = jnp.logical_or(n - m < 0.5, R < EPS)
+    return jnp.where(degenerate, 0.0, gns)
+
+
+@functools.lru_cache(maxsize=None)
+def _read_jit(estimator: str, reset: bool):
+    # deferred import: repro.core's __init__ pulls the controller shim, which
+    # reaches back into repro.adapt — module-level would be a cycle
+    from repro.core import diversity
+
+    def read(div_state):
+        scalars = jnp.stack(
+            [
+                diversity.estimate(div_state, estimator),
+                gns_from_accumulators(div_state, estimator),
+                div_state.sample_count,
+            ]
+        )
+        if not reset:
+            # tick reads leave the accumulators untouched — returning them
+            # through the jit would copy the param-sized grad_sum tree
+            return scalars
+        return scalars, diversity.reset_state(div_state)
+
+    return jax.jit(read)
+
+
+def read_signals(
+    state: Any,
+    estimator: str = "moment",
+    *,
+    reset: bool,
+    batch_size: int = 0,
+    loss: float | None = None,
+    throughput: float | None = None,
+    event: str | None = None,
+) -> tuple[Signals, Any]:
+    """Read boundary signals off a ``TrainState``'s diversity accumulators.
+
+    Returns ``(signals, state)``; with ``reset=True`` the returned state has
+    freshly-zeroed accumulators (the epoch-boundary semantics), with
+    ``reset=False`` the state is unchanged (mid-epoch ticks observe the
+    running window).  Exactly ONE device->host transfer regardless of how
+    many scalars are read (they come back stacked).
+    """
+    if reset:
+        scalars, div_state = _read_jit(estimator, True)(state.div_state)
+        state = state._replace(div_state=div_state)
+    else:
+        scalars = _read_jit(estimator, False)(state.div_state)
+    vals = np.asarray(scalars)  # the single host transfer
+    sig = Signals(
+        diversity=float(vals[0]),
+        gns=float(vals[1]),
+        samples=float(vals[2]),
+        loss=loss,
+        throughput=throughput,
+        batch_size=int(batch_size),
+        event=event,
+    )
+    return sig, state

@@ -2,8 +2,10 @@
 
 This package is the paper's primary contribution:
   diversity.py     Delta_hat estimators (exact / gram / moment) + Oracle
-  batch_policy.py  DiveBatch, AdaBatch, Fixed policies + bucketing
-  controller.py    epoch controller coupling batch size <-> learning rate
+  batch_policy.py  DiveBatch, OracleDiveBatch, AdaBatch, Fixed + bucketing
+  controller.py    DEPRECATED epoch-only controller — a thin shim over a
+                   repro.adapt.AdaptationProgram (the single adaptation
+                   path; see repro.adapt for the composable API)
 """
 
 from repro.core import diversity
@@ -12,6 +14,7 @@ from repro.core.batch_policy import (
     BatchPolicy,
     DiveBatch,
     FixedBatch,
+    OracleDiveBatch,
     bucket,
     make_policy,
 )
@@ -25,6 +28,7 @@ __all__ = [
     "FixedBatch",
     "AdaBatch",
     "DiveBatch",
+    "OracleDiveBatch",
     "bucket",
     "make_policy",
     "AdaptiveBatchController",

@@ -194,7 +194,20 @@ class DiveBatch(BatchPolicy):
             m_max=self.m_max,
         )
         self.m = m_new
-        return PolicyInfo(self.m, raw, float(diversity), "divebatch")
+        return PolicyInfo(self.m, raw, float(diversity), self.reason)
+
+    #: provenance tag stamped into every PolicyInfo this rule emits
+    reason = "divebatch"
+
+
+class OracleDiveBatch(DiveBatch):
+    """Same resize rule as DiveBatch, but the caller feeds the *exact*
+    full-dataset diversity (recomputed at fixed params each epoch — the
+    paper's Oracle baseline, ``Trainer(estimator='oracle')``) instead of the
+    within-epoch estimate.  Distinguished by ``reason='oracle'`` in the
+    PolicyInfo so logs/history tell the two apart."""
+
+    reason = "oracle"
 
 
 def make_policy(name: str, **kwargs) -> BatchPolicy:
@@ -209,7 +222,8 @@ def make_policy(name: str, **kwargs) -> BatchPolicy:
             kwargs.get("granule", 1), kwargs.get("bucket_mode", "pow2"),
         )
     if name in ("divebatch", "oracle"):
-        return DiveBatch(
+        cls = OracleDiveBatch if name == "oracle" else DiveBatch
+        return cls(
             kwargs["m0"], kwargs["m_max"], kwargs["delta"], kwargs["dataset_size"],
             kwargs.get("granule", 1), kwargs.get("bucket_mode", "pow2"),
             kwargs.get("monotone", False), kwargs.get("m_min"),

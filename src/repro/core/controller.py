@@ -1,13 +1,18 @@
-"""Epoch-level adaptive-batch controller.
+"""Epoch-level adaptive-batch controller — DEPRECATED shim.
 
-Ties together: a batch policy (DiveBatch / AdaBatch / Fixed), a diversity
-estimator tier, the learning-rate coupling (Goyal et al. linear scaling /
-sqrt / none), and the background LR schedule (the paper uses step decay
-x0.75 every 20 epochs on synthetic; the CIFAR recipes use their own decay).
+``AdaptiveBatchController`` predates the ``repro.adapt`` redesign: it ties a
+batch policy to string-typed lr coupling at epoch-only granularity.  It now
+survives as a thin compatibility shim over an
+``repro.adapt.AdaptationProgram`` (a ``FromBatchPolicy``-wrapped policy plus
+a typed ``LrCoupling``): constructing one and calling ``on_epoch_end``
+drives exactly the same code path the new API does, and its checkpoints
+round-trip both the pre-redesign (v1) and the current (v2) schema.
 
-The controller is a host-side object; everything it returns feeds either the
-data pipeline (batch size) or the next compiled-step bucket (lr is a traced
-scalar argument so LR changes never recompile).
+New code should build an ``AdaptationProgram`` directly — that is the only
+way to get step-granular decisions (ticks/events), mid-epoch resize +
+reshard, combinators (``Hysteresis``, ``Warmup``, ``Chain``, ...), and the
+gradient-noise policy family.  See ``repro.adapt`` and
+``examples/quickstart.py``.
 """
 
 from __future__ import annotations
@@ -15,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.core.batch_policy import BatchPolicy, PolicyInfo
+from repro.core.batch_policy import BatchPolicy
 
 
 def lr_rescale(rule: str, lr: float, m_old: int, m_new: int) -> float:
@@ -40,6 +45,14 @@ class EpochDecision:
 
 
 class AdaptiveBatchController:
+    """DEPRECATED: thin shim over ``repro.adapt.AdaptationProgram``.
+
+    The constructor and ``on_epoch_end``/``state_dict``/``load_state_dict``
+    surfaces are unchanged from the pre-redesign controller; all state lives
+    in ``self.program`` (the ``Trainer`` drives that program directly, so
+    controller views stay consistent whichever way the run was built).
+    """
+
     def __init__(
         self,
         policy: BatchPolicy,
@@ -50,63 +63,94 @@ class AdaptiveBatchController:
     ):
         """``lr_schedule(epoch, lr) -> lr`` is the *background* decay applied
         on top of batch-coupled rescaling (e.g. x0.75 every 20 epochs)."""
+        # deferred import: repro.adapt reaches back into repro.core
+        from repro.adapt import AdaptationProgram, FromBatchPolicy, LrCoupling
+        from repro.adapt.policy import PolicyBase
+
         self.policy = policy
-        self.lr = float(base_lr)
+        wrapped = policy if isinstance(policy, PolicyBase) else FromBatchPolicy(policy)
+        self.program = AdaptationProgram(
+            wrapped,
+            base_lr,
+            LrCoupling(rule=lr_rule, decay=lr_schedule),
+            estimator=estimator,
+        )
         self.base_lr = float(base_lr)
         self.lr_rule = lr_rule
         self.lr_schedule = lr_schedule
         self.estimator = estimator
-        self.epoch = 0
-        self.history: list[EpochDecision] = []
+
+    # -- program views (the legacy attribute surface) -------------------------
+    @property
+    def lr(self) -> float:
+        return self.program.lr
+
+    @lr.setter
+    def lr(self, value: float) -> None:
+        self.program.lr = float(value)
+
+    @property
+    def epoch(self) -> int:
+        return self.program.epoch
 
     @property
     def batch_size(self) -> int:
-        return self.policy.m
+        return self.program.batch_size
 
     @property
     def needs_diversity(self) -> bool:
-        return self.policy.needs_diversity
+        return self.program.needs_diversity
 
     @property
     def compile_bound(self) -> int:
         """Max distinct step compilations this run can cost a StepEngine:
         the policy's bucket-lattice size (pow2 default:
         log2(m_max/granule) + 1; see BatchPolicy.max_buckets)."""
-        return self.policy.max_buckets
+        return self.program.compile_bound
+
+    @property
+    def history(self) -> list[EpochDecision]:
+        return [
+            EpochDecision(
+                epoch=a.epoch,
+                batch_size=a.batch_size,
+                lr=a.lr,
+                diversity=a.diversity,
+                raw_batch_size=(
+                    a.raw_batch_size if a.raw_batch_size is not None
+                    else float(a.batch_size)
+                ),
+                rescaled=a.rescaled,
+            )
+            for a in self.program.history
+            if a.boundary == "epoch"
+        ]
 
     def on_epoch_end(self, diversity: float | None = None) -> EpochDecision:
-        m_old = self.policy.m
-        info: PolicyInfo = self.policy.on_epoch_end(self.epoch, diversity)
-        m_new = info.batch_size
-        self.lr = lr_rescale(self.lr_rule, self.lr, m_old, m_new)
-        if self.lr_schedule is not None:
-            self.lr = self.lr_schedule(self.epoch, self.lr)
-        decision = EpochDecision(
-            epoch=self.epoch,
-            batch_size=m_new,
-            lr=self.lr,
-            diversity=info.diversity,
-            raw_batch_size=info.raw_batch_size,
-            rescaled=m_old != m_new,
-        )
-        self.history.append(decision)
-        self.epoch += 1
-        return decision
+        from repro.adapt import Clock, Signals
 
-    # -- checkpointable state -------------------------------------------------
+        applied = self.program.observe(
+            Signals(diversity=diversity, batch_size=self.batch_size),
+            Clock(epoch=self.epoch, step=-1, boundary="epoch"),
+        )
+        return EpochDecision(
+            epoch=applied.epoch,
+            batch_size=applied.batch_size,
+            lr=applied.lr,
+            diversity=applied.diversity,
+            raw_batch_size=(
+                applied.raw_batch_size if applied.raw_batch_size is not None
+                else float(applied.batch_size)
+            ),
+            rescaled=applied.rescaled,
+        )
+
+    # -- checkpointable state (v2 written, v1 accepted) -----------------------
     def state_dict(self) -> dict:
-        return {
-            "policy": self.policy.state_dict(),
-            "lr": self.lr,
-            "epoch": self.epoch,
-            "history": [dataclasses.asdict(d) for d in self.history],
-        }
+        return self.program.state_dict()
 
     def load_state_dict(self, state: dict) -> None:
-        self.policy.load_state_dict(state["policy"])
-        self.lr = float(state["lr"])
-        self.epoch = int(state["epoch"])
-        self.history = [EpochDecision(**d) for d in state.get("history", [])]
+        self.program.load_state_dict(state)
 
 
 def step_decay(factor: float = 0.75, every: int = 20) -> Callable[[int, float], float]:

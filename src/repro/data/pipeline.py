@@ -1,11 +1,14 @@
 """Epoch-oriented, resumable, sharding-aware batch pipeline.
 
 Design constraints coming from the paper + the multi-pod target:
-  * batch size changes at epoch boundaries (DiveBatch) -> the iterator is
-    constructed per epoch with that epoch's global batch size;
+  * the batch size changes at adaptation boundaries (epoch ends, or — via
+    ``repro.adapt`` — mid-epoch ticks/events): an iterator is constructed
+    per (epoch, batch-size) segment, and ``start_sample`` lets a mid-epoch
+    resize continue the SAME epoch permutation at the exact sample offset
+    the previous size stopped at;
   * determinism under restart: the permutation is a pure function of
-    (seed, epoch), and the cursor (epoch, batch_index) is checkpointed, so a
-    resumed job sees the identical remaining batches;
+    (seed, epoch), and the cursor (epoch, batch_index, sample_index) is
+    checkpointed, so a resumed job sees the identical remaining batches;
   * sharding-awareness: each host materialises only its slice of the global
     batch; device placement uses a NamedSharding over the data axes.
 """
@@ -24,16 +27,26 @@ from repro.data.synthetic import ArrayDataset
 
 @dataclasses.dataclass
 class Cursor:
-    """Checkpointable position in the sample stream."""
+    """Checkpointable position in the sample stream.
+
+    ``sample_index`` is the number of samples consumed from the current
+    epoch's permutation — the unit that stays meaningful when the batch size
+    changes MID-epoch (``batch_index`` alone cannot say where the epoch is
+    once steps have had different sizes).  Zero at every epoch boundary;
+    pre-redesign checkpoints without the field load as zero.
+    """
 
     epoch: int = 0
     batch_index: int = 0
+    sample_index: int = 0
 
     def state_dict(self) -> dict:
-        return {"epoch": self.epoch, "batch_index": self.batch_index}
+        return {"epoch": self.epoch, "batch_index": self.batch_index,
+                "sample_index": self.sample_index}
 
     def load_state_dict(self, d: dict) -> None:
         self.epoch, self.batch_index = int(d["epoch"]), int(d["batch_index"])
+        self.sample_index = int(d.get("sample_index", 0))
 
 
 def epoch_permutation(n: int, seed: int, epoch: int) -> np.ndarray:
@@ -58,7 +71,19 @@ class EpochLoader:
         drop_remainder: bool = True,
         shard_index: int = 0,
         shard_count: int = 1,
+        start_sample: int | None = None,
+        perm: np.ndarray | None = None,
     ):
+        """``start_sample`` resumes the epoch's permutation at an arbitrary
+        sample offset — the unit a MID-epoch batch-size change needs (the
+        new loader continues the identical permutation exactly where the old
+        size stopped).  Default: ``start_batch * batch_size``, the classic
+        batch-aligned resume.
+
+        ``perm`` supplies the epoch permutation precomputed (must equal
+        ``epoch_permutation(len(dataset), seed, epoch)``): a caller opening
+        several loaders for one epoch (one per mid-epoch resize segment)
+        avoids re-running the O(n) shuffle per segment."""
         if batch_size % shard_count != 0:
             raise ValueError(
                 f"global batch {batch_size} not divisible by shard_count {shard_count}"
@@ -71,16 +96,23 @@ class EpochLoader:
         self.shard_index = int(shard_index)
         self.shard_count = int(shard_count)
         n = len(dataset)
-        self.num_batches = n // batch_size if drop_remainder else -(-n // batch_size)
-        self._perm = epoch_permutation(n, seed, epoch)
+        self.start_sample = (
+            int(start_sample) if start_sample is not None
+            else self.start_batch * self.batch_size
+        )
+        remaining = max(n - self.start_sample, 0)
+        self.num_batches = (
+            remaining // batch_size if drop_remainder else -(-remaining // batch_size)
+        )
+        self._perm = perm if perm is not None else epoch_permutation(n, seed, epoch)
 
     def __len__(self) -> int:
-        return max(self.num_batches - self.start_batch, 0)
+        return self.num_batches
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         per_shard = self.batch_size // self.shard_count
-        for b in range(self.start_batch, self.num_batches):
-            lo = b * self.batch_size + self.shard_index * per_shard
+        for b in range(self.num_batches):
+            lo = self.start_sample + b * self.batch_size + self.shard_index * per_shard
             idx = self._perm[lo : lo + per_shard]
             yield self.dataset.get(idx)
 
@@ -94,7 +126,8 @@ def put_global_batch(batch: dict[str, np.ndarray], sharding=None) -> dict[str, j
     return {k: jax.device_put(v, sharding) for k, v in batch.items()}
 
 
-def prefetch(batches, put=put_global_batch, *, depth: int = 2):
+def prefetch(batches, put=put_global_batch, *, depth: int = 2,
+             host_overlap: bool = False):
     """Double-buffered device feed: ``put`` (device transfer) of batch *b+1*
     is issued while step *b* executes.
 
@@ -104,9 +137,23 @@ def prefetch(batches, put=put_global_batch, *, depth: int = 2):
     the unbuffered ``put``-per-iteration loop; the yielded values (and
     therefore the training trajectory) are identical either way, only the
     transfer timing moves.
+
+    ``host_overlap=True`` additionally moves the HOST side of producing a
+    batch — the numpy gather/permutation inside ``batches`` itself — onto a
+    background thread, so for large batches the indexing copy overlaps the
+    device step too, not just the transfer.  The yielded sequence is
+    identical (one producer, FIFO queue of the same ``depth``); closing the
+    generator early (e.g. a mid-epoch resize abandoning the feed) stops the
+    producer thread.
     """
     if depth < 1:
         raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+    if host_overlap:
+        return _threaded_prefetch(batches, put, depth)
+    return _dispatch_prefetch(batches, put, depth)
+
+
+def _dispatch_prefetch(batches, put, depth: int):
     buf: collections.deque = collections.deque()
     for b in batches:
         buf.append(put(b))
@@ -114,6 +161,57 @@ def prefetch(batches, put=put_global_batch, *, depth: int = 2):
             yield buf.popleft()
     while buf:
         yield buf.popleft()
+
+
+def _threaded_prefetch(batches, put, depth: int):
+    """Producer thread runs gather (iterating ``batches``) AND ``put``;
+    consumer drains a bounded FIFO.  Exceptions propagate; early close of
+    the generator stops the producer."""
+    import queue
+    import threading
+
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    done = object()  # sentinel
+    error: list[BaseException] = []
+
+    def _offer(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        try:
+            for b in batches:
+                if stop.is_set() or not _offer(put(b)):
+                    return
+        except BaseException as e:  # surfaced on the consumer side
+            error.append(e)
+        finally:
+            _offer(done)
+
+    thread = threading.Thread(target=producer, daemon=True, name="prefetch")
+    thread.start()
+    try:
+        while True:
+            item = q.get()
+            if item is done:
+                if error:
+                    raise error[0]
+                return
+            yield item
+    finally:
+        stop.set()
+        while not q.empty():  # unblock a producer stuck on a full queue
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        thread.join(timeout=10)
 
 
 def microbatches(batch: dict[str, np.ndarray], micro_size: int):

@@ -38,14 +38,21 @@ class InjectedFailure(RuntimeError):
 
 
 class Watchdog:
-    """Step-time z-score straggler detector (logs; a real deployment would
-    trigger re-layout or hot-spare swap)."""
+    """Step-time z-score straggler detector.
 
-    def __init__(self, window: int = 20, z_thresh: float = 4.0):
+    ``on_flag(step, z)`` (optional) fires on every flag — the supervisor
+    wires it to ``Trainer.inject_event('straggler')``, which the
+    ``repro.adapt`` program observes as an ``event`` boundary BETWEEN steps:
+    an event-responsive policy can resize the batch / evacuate to a
+    narrower elastic rung mid-epoch instead of waiting for the epoch end.
+    """
+
+    def __init__(self, window: int = 20, z_thresh: float = 4.0, on_flag=None):
         self.times: list[float] = []
         self.window = window
         self.z_thresh = z_thresh
         self.flagged: list[tuple[int, float]] = []
+        self.on_flag = on_flag
 
     def observe(self, step: int, dt: float):
         self.times.append(dt)
@@ -56,6 +63,8 @@ class Watchdog:
             if z > self.z_thresh:
                 self.flagged.append((step, z))
                 log.warning("straggler: step %d took %.3fs (z=%.1f)", step, dt, z)
+                if self.on_flag is not None:
+                    self.on_flag(step, z)
 
 
 def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
@@ -78,7 +87,10 @@ def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
             log.info("elastic: %s on rung %d (dp=%d)",
                      "restarted" if restarts else "starting",
                      rung.index, rung.dp)
-        watchdog = Watchdog()
+        # straggler flags feed the trainer's adapt program as mid-epoch events
+        watchdog = Watchdog(
+            on_flag=lambda step, z: trainer.inject_event("straggler")
+        )
         try:
             while trainer.cursor.epoch < total_epochs:
                 t0 = time.time()
@@ -121,7 +133,12 @@ def main():
 
     import jax
 
-    from repro.core import AdaptiveBatchController, make_policy
+    from repro.adapt import (
+        AdaBatchPolicy,
+        AdaptationProgram,
+        DiveBatchPolicy,
+        FixedPolicy,
+    )
     from repro.data import sigmoid_synthetic
     from repro.elastic import MeshLadder
     from repro.models import small
@@ -130,20 +147,28 @@ def main():
 
     train, val, _ = sigmoid_synthetic(n=4000, d=64, seed=0)
 
+    def make_policy_obj():
+        # DiveBatch with on_event=True: a Watchdog straggler flag re-fires
+        # the (memoryless) rule between steps on the running estimate —
+        # the event wiring is live, not just plumbed
+        if args.method == "divebatch":
+            return DiveBatchPolicy(64, 1024, delta=0.1, dataset_size=len(train),
+                                   granule=16, on_event=True)
+        if args.method == "adabatch":
+            return AdaBatchPolicy(64, 1024, granule=16)
+        return FixedPolicy(64, 1024, granule=16)
+
     def make_trainer(mgr):
         fns = ModelFns(
             batch_loss=small.logreg_batch_loss,
             example_loss=small.logreg_loss,
             metrics=lambda p, b: {"acc": small.logreg_accuracy(p, b)},
         )
-        controller = AdaptiveBatchController(
-            make_policy(args.method, m0=64, m_max=1024, delta=0.1,
-                        dataset_size=len(train), granule=16),
-            base_lr=1.0,
-        )
+        program = AdaptationProgram(make_policy_obj(), base_lr=1.0,
+                                    estimator="exact")
         return Trainer(
             fns, small.logreg_init(jax.random.key(0), 64), sgd(momentum=0.9),
-            controller, train, val, estimator="exact", ckpt=mgr,
+            program, train, val, estimator="exact", ckpt=mgr,
             elastic=MeshLadder(granule=16) if args.elastic else None,
         )
 

@@ -1,10 +1,17 @@
 """Training CLI: paper reproductions and LM training with adaptive batching.
 
+Adaptation is built on ``repro.adapt``: ``--method`` picks the policy
+(divebatch / adabatch / sgd / oracle / gns — the gradient-noise-scale
+family), ``--tick-every N`` enables mid-epoch decisions every N steps (with
+``--elastic`` a mid-epoch resize also reshards the rung between steps), and
+``--hysteresis B`` wraps the policy in a tolerance band around the pow2
+bucket thresholds.
+
 Examples:
   python -m repro.launch.train --task synthetic-convex --method divebatch
   python -m repro.launch.train --task imagelike --method adabatch --epochs 30
-  python -m repro.launch.train --task lm --arch qwen2-7b --reduced \
-      --method divebatch --steps 50
+  python -m repro.launch.train --task synthetic-convex --method gns \
+      --tick-every 8 --elastic
 """
 
 from __future__ import annotations
@@ -17,7 +24,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AdaptiveBatchController, make_policy, step_decay
+from repro.adapt import (
+    AdaBatchPolicy,
+    AdaptationProgram,
+    DiveBatchPolicy,
+    FixedPolicy,
+    GradNoisePolicy,
+    Hysteresis,
+    LrCoupling,
+)
+from repro.core import step_decay
 from repro.data import imagelike_classification, sigmoid_synthetic
 from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
@@ -61,22 +77,35 @@ def build_task(task: str, seed: int):
     raise ValueError(f"unknown task {task!r}")
 
 
-def make_controller(args, dataset_size: int) -> AdaptiveBatchController:
-    policy = make_policy(
-        args.method,
-        m0=args.batch_size,
-        m_max=args.max_batch_size,
-        delta=args.delta,
-        dataset_size=dataset_size,
-        granule=args.granule,
-        resize_freq=args.resize_freq,
-    )
-    return AdaptiveBatchController(
+def make_program(args, dataset_size: int) -> AdaptationProgram:
+    """Build the repro.adapt program for the CLI flags (the single
+    adaptation path — the legacy AdaptiveBatchController is a shim over
+    exactly this object)."""
+    common = dict(m0=args.batch_size, m_max=args.max_batch_size,
+                  granule=args.granule)
+    tick = args.tick_every > 0
+    if args.method in ("sgd", "fixed"):
+        policy = FixedPolicy(**common)
+    elif args.method == "adabatch":
+        policy = AdaBatchPolicy(resize_freq=args.resize_freq, **common)
+    elif args.method in ("divebatch", "oracle"):
+        policy = DiveBatchPolicy(
+            delta=args.delta, dataset_size=dataset_size,
+            oracle=args.method == "oracle", on_tick=tick, **common,
+        )
+    elif args.method == "gns":
+        policy = GradNoisePolicy(alpha=args.gns_alpha, on_tick=tick, **common)
+    else:
+        raise ValueError(f"unknown method {args.method!r}")
+    if args.hysteresis > 0:
+        policy = Hysteresis(policy, band=args.hysteresis)
+    decay = step_decay(args.lr_decay, args.lr_decay_every) if args.lr_decay < 1 else None
+    return AdaptationProgram(
         policy,
         base_lr=args.lr,
-        lr_rule=args.lr_rule,
-        lr_schedule=step_decay(args.lr_decay, args.lr_decay_every) if args.lr_decay < 1 else None,
+        coupling=LrCoupling(rule=args.lr_rule, decay=decay),
         estimator=args.estimator,
+        tick_every=args.tick_every,
     )
 
 
@@ -84,9 +113,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", default="synthetic-convex")
     ap.add_argument("--method", default="divebatch",
-                    choices=["sgd", "adabatch", "divebatch", "oracle"])
+                    choices=["sgd", "adabatch", "divebatch", "oracle", "gns"])
     ap.add_argument("--estimator", default="exact",
                     choices=["exact", "gram", "moment", "oracle"])
+    ap.add_argument("--tick-every", type=int, default=0,
+                    help="mid-epoch adaptation: observe the running signals "
+                         "every N optimizer steps (0 = epoch boundaries "
+                         "only); a mid-epoch decision resizes the batch and "
+                         "reshards the elastic rung between steps")
+    ap.add_argument("--gns-alpha", type=float, default=1.0,
+                    help="--method gns: target batch = alpha * measured "
+                         "gradient-noise scale")
+    ap.add_argument("--hysteresis", type=float, default=0.0,
+                    help="tolerance band around pow2 bucket thresholds "
+                         "(e.g. 0.1): resizes within the band hold the "
+                         "current size, making the schedule rung-invariant "
+                         "under dp-reduction-order jitter")
     ap.add_argument("--epochs", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=128)
     ap.add_argument("--max-batch-size", type=int, default=2048)
@@ -144,11 +186,11 @@ def main():
 
     with plan_ctx:
         fns, params, train, val = build_task(args.task, args.seed)
-        controller = make_controller(args, len(train))
+        program = make_program(args, len(train))
         trainer = Trainer(
             fns, params, sgd(momentum=args.momentum, weight_decay=args.weight_decay),
-            controller, train, val,
-            estimator=args.estimator if args.method in ("divebatch", "oracle") else "none",
+            program, train, val,
+            estimator=args.estimator if args.method in ("divebatch", "oracle", "gns") else "none",
             seed=args.seed,
             ckpt=CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None,
             ckpt_every=args.ckpt_every,
@@ -173,9 +215,14 @@ def main():
     if final:
         print(f"final: epoch={final.epoch} val_loss={final.val_loss:.4f} "
               f"metrics={final.val_metrics} batch={final.batch_size}")
-    print(f"engine: compiles={stats.compiles} (bound {controller.compile_bound}) "
+    print(f"engine: compiles={stats.compiles} (bound {program.compile_bound}) "
           f"hits={stats.bucket_hits} buckets={stats.buckets} "
           f"dispatch-steps/s={stats.dispatch_steps_per_sec:.1f} donated={stats.donate}")
+    mid = [a for a in program.history if a.boundary != "epoch"]
+    if mid:
+        print(f"adapt: {len(mid)} mid-epoch decisions "
+              f"({sum(a.rescaled for a in mid)} resized) via "
+              f"{sorted(set(a.boundary for a in mid))}")
     if ladder is not None:
         print(f"elastic: ladder dp={ladder.widths} reshards={stats.reshards} "
               f"rungs-per-compile={stats.rungs}")

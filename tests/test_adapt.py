@@ -1,0 +1,871 @@
+"""repro.adapt: the signal-driven adaptation API.
+
+Covers the tentpole acceptance criteria — golden equivalence of the
+adapt-driven run vs the legacy AdaptiveBatchController shim, mid-epoch
+tick/event decisions that resize + reshard BETWEEN steps with exact loader
+cursor continuity (visited-sample multiset equality), v1 checkpoint
+restore — plus the combinator family (Hysteresis no-flap property test),
+the gradient-noise signal/policy, and the threaded prefetch satellite.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.adapt import (
+    AdaBatchPolicy,
+    AdaptationProgram,
+    Chain,
+    Clamped,
+    Clock,
+    Decision,
+    DiveBatchPolicy,
+    FixedPolicy,
+    FromBatchPolicy,
+    GradNoisePolicy,
+    Hysteresis,
+    LrCoupling,
+    PolicyBase,
+    Signals,
+    Switch,
+    Warmup,
+    gns_from_accumulators,
+    read_signals,
+)
+from repro.ckpt import CheckpointManager
+from repro.core import (
+    AdaptiveBatchController,
+    DiveBatch,
+    OracleDiveBatch,
+    bucket,
+    diversity,
+    make_policy,
+    step_decay,
+)
+from repro.data import sigmoid_synthetic
+from repro.elastic import MeshLadder
+from repro.models import small
+from repro.optim import sgd
+from repro.train import init_state
+from repro.train.loop import ModelFns, Trainer
+
+SEED, N, D = 3, 2048, 32
+
+
+def _fns():
+    return ModelFns(
+        batch_loss=small.mlp_batch_loss,
+        example_loss=small.mlp_loss,
+        metrics=lambda p, b: {"acc": small.mlp_accuracy(p, b)},
+    )
+
+
+def _pow2_data(seed=SEED):
+    """sigmoid_synthetic splits 80/20, so n=2560 gives a TRAIN set of 2048 —
+    divisible by every pow2 lattice point <= 256, which the mid-epoch
+    multiset tests rely on (full-permutation coverage at any mix of
+    sizes)."""
+    return sigmoid_synthetic(n=2560, d=D, seed=seed)
+
+
+def _trainer(policy_or_prog, *, estimator="exact", elastic=None, seed=SEED,
+             ckpt=None, prefetch=True, base_lr=0.5, data=None, **prog_kw):
+    train, val, _ = data if data is not None else sigmoid_synthetic(
+        n=N, d=D, seed=seed)
+    prog = (
+        policy_or_prog
+        if isinstance(policy_or_prog, (AdaptationProgram, AdaptiveBatchController))
+        else AdaptationProgram(policy_or_prog, base_lr=base_lr, **prog_kw)
+    )
+    return Trainer(_fns(), small.mlp_init(jax.random.key(seed), D),
+                   sgd(momentum=0.9), prog, train, val, estimator=estimator,
+                   seed=seed, elastic=elastic, ckpt=ckpt, prefetch=prefetch)
+
+
+def _record_visited(trainer, sink):
+    """Capture the first feature column of every batch the engine steps on
+    (consumed samples — prefetch pull-ahead that a resize drops must NOT
+    appear)."""
+    orig = trainer.engine.step
+
+    def step(state, batch, lr):
+        sink.append(np.asarray(batch["x"][:, 0]).copy())
+        return orig(state, batch, lr)
+
+    trainer.engine.step = step
+
+
+# ---------------------------------------------------------------------------
+# satellite: the oracle registry fix
+# ---------------------------------------------------------------------------
+
+
+class TestOracleRegistry:
+    def test_oracle_maps_to_its_own_class(self):
+        p = make_policy("oracle", m0=128, m_max=2048, delta=0.1,
+                        dataset_size=50_000, granule=16)
+        assert type(p) is OracleDiveBatch
+        assert isinstance(p, DiveBatch)  # same resize rule
+        assert p.on_epoch_end(0, 0.05).reason == "oracle"
+
+    def test_divebatch_is_not_oracle(self):
+        p = make_policy("divebatch", m0=128, m_max=2048, delta=0.1,
+                        dataset_size=50_000)
+        assert type(p) is DiveBatch
+        assert p.on_epoch_end(0, 0.05).reason == "divebatch"
+
+    def test_same_rule_same_schedule(self):
+        kw = dict(m0=128, m_max=2048, delta=0.1, dataset_size=50_000, granule=16)
+        a, b = make_policy("divebatch", **kw), make_policy("oracle", **kw)
+        for d in (0.05, 0.2, 0.01):
+            assert a.on_epoch_end(0, d).batch_size == b.on_epoch_end(0, d).batch_size
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: adapt program == legacy controller shim, bit-identical
+# ---------------------------------------------------------------------------
+
+
+class TestGoldenEquivalence:
+    def _run_pair(self, legacy, program, epochs=4, estimator="exact"):
+        t_old = _trainer(legacy, estimator=estimator)
+        h_old = t_old.run(epochs, verbose=False)
+        t_new = _trainer(program, estimator=estimator)
+        h_new = t_new.run(epochs, verbose=False)
+        assert [h.batch_size for h in h_old] == [h.batch_size for h in h_new]
+        assert [h.lr for h in h_old] == [h.lr for h in h_new]
+        assert [h.train_loss for h in h_old] == [h.train_loss for h in h_new]
+        for a, b in zip(jax.tree.leaves(t_old.state.params),
+                        jax.tree.leaves(t_new.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_divebatch(self):
+        legacy = AdaptiveBatchController(
+            make_policy("divebatch", m0=32, m_max=256, delta=0.08,
+                        dataset_size=N, granule=16),
+            base_lr=0.5,
+        )
+        program = AdaptationProgram(
+            DiveBatchPolicy(m0=32, m_max=256, delta=0.08, dataset_size=N,
+                            granule=16),
+            base_lr=0.5, estimator="exact",
+        )
+        self._run_pair(legacy, program)
+
+    def test_adabatch_with_lr_coupling(self):
+        legacy = AdaptiveBatchController(
+            make_policy("adabatch", m0=32, m_max=256, resize_freq=2, granule=16),
+            base_lr=0.5, lr_rule="linear", lr_schedule=step_decay(0.5, 3),
+        )
+        program = AdaptationProgram(
+            AdaBatchPolicy(m0=32, m_max=256, resize_freq=2, granule=16),
+            base_lr=0.5,
+            coupling=LrCoupling.linear(decay=step_decay(0.5, 3)),
+        )
+        self._run_pair(legacy, program, estimator="none")
+
+
+# ---------------------------------------------------------------------------
+# mid-epoch decisions: resize + reshard between steps, exact loader cursor
+# ---------------------------------------------------------------------------
+
+
+class ScriptedGrow(PolicyBase):
+    """Resize to ``target`` on the first tick/event; hold otherwise."""
+
+    def __init__(self, m0, target, **flags):
+        super().__init__(**flags)
+        self.m = m0
+        self.target = target
+        self.fired = False
+
+    def _decide(self, signals, clock):
+        if clock.boundary in ("tick", "event") and not self.fired:
+            self.fired = True
+            self.m = self.target
+            return Decision(batch_size=self.m, reason="scripted")
+        return None
+
+    @property
+    def batch_size(self):
+        return self.m
+
+    def set_batch_size(self, m):
+        self.m = int(m)
+
+    def state_dict(self):
+        return {"m": self.m, "fired": self.fired}
+
+    def load_state_dict(self, state):
+        self.m, self.fired = int(state["m"]), bool(state["fired"])
+
+
+@pytest.mark.parametrize("prefetch", [True, "thread", False])
+def test_mid_epoch_tick_resize_visits_same_sample_multiset(prefetch):
+    """A tick-fired mid-epoch resize (16 -> 64 after 4 steps) must reshard
+    onto the wider rung BETWEEN steps and continue the epoch's permutation
+    exactly: the visited-sample multiset equals the boundary-only run's."""
+    visited_mid, visited_ref = [], []
+    data = _pow2_data()
+
+    t_mid = _trainer(ScriptedGrow(16, 64, on_tick=True),
+                     estimator="none", elastic=MeshLadder(granule=16),
+                     tick_every=4, prefetch=prefetch, data=data)
+    _record_visited(t_mid, visited_mid)
+    start_rung = t_mid.rung.index
+    t_mid.run(1, verbose=False)
+
+    t_ref = _trainer(FixedPolicy(16), estimator="none",
+                     elastic=MeshLadder(granule=16), prefetch=prefetch,
+                     data=data)
+    _record_visited(t_ref, visited_ref)
+    t_ref.run(1, verbose=False)
+
+    # the resize actually happened mid-epoch, on the rung ladder
+    assert t_mid.engine.stats.reshards == 1
+    assert t_mid.rung.index > start_rung
+    sizes = [len(v) for v in visited_mid]
+    assert sizes[0] == 16 and sizes[-1] == 64  # both sizes ran this epoch
+    assert sum(sizes) == N  # full epoch coverage despite the switch
+    # the tick decision is on the program history with its boundary kind
+    mid = [a for a in t_mid.adapt.history if a.boundary == "tick"]
+    assert len(mid) == 1 and mid[0].batch_size == 64 and mid[0].rescaled
+
+    # THE acceptance property: identical visited-sample multiset
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(visited_mid)),
+        np.sort(np.concatenate(visited_ref)),
+    )
+
+
+def test_injected_watchdog_event_resizes_between_steps():
+    """An injected event (the supervisor Watchdog path) fires the policy at
+    an 'event' boundary between steps: batch + rung change mid-epoch."""
+    t = _trainer(ScriptedGrow(16, 128, on_event=True), estimator="none",
+                 elastic=MeshLadder(granule=16), data=_pow2_data())
+    visited = []
+    _record_visited(t, visited)
+    t.inject_event("straggler")
+    t.run(1, verbose=False)
+    assert t.engine.stats.reshards == 1
+    ev = [a for a in t.adapt.history if a.boundary == "event"]
+    assert len(ev) == 1 and ev[0].batch_size == 128 and ev[0].rescaled
+    sizes = [len(v) for v in visited]
+    assert sizes[0] == 16 and sizes[-1] == 128
+    assert sum(sizes) == N  # permutation coverage preserved
+    # (bucket, rung) cache: both segments compiled on their own rung
+    stats = t.engine.stats
+    assert set(zip(stats.buckets, stats.rungs)) == {(16, 0), (128, 3)}
+
+
+def test_divebatch_on_tick_same_multiset_as_epoch_only():
+    """A real (non-scripted) DiveBatch firing on ticks mid-epoch keeps full
+    permutation coverage: every visited multiset equals the fixed-size
+    run's, for any sequence of phase-aligned lattice resizes."""
+    visited_tick, visited_ref = [], []
+    data = _pow2_data()
+    t_tick = _trainer(
+        DiveBatchPolicy(m0=16, m_max=256, delta=0.08, dataset_size=N,
+                        granule=16, on_tick=True),
+        estimator="exact", tick_every=8, data=data,
+    )
+    _record_visited(t_tick, visited_tick)
+    t_tick.run(2, verbose=False)
+    assert any(a.boundary == "tick" and a.rescaled for a in t_tick.adapt.history)
+
+    t_ref = _trainer(FixedPolicy(16, 256), estimator="none", data=data)
+    _record_visited(t_ref, visited_ref)
+    t_ref.run(1, verbose=False)
+    # epoch 0 of the tick run covers the same multiset as a fixed epoch 0
+    epoch0 = [v for v in visited_tick]
+    total = 0
+    cut = 0
+    for cut, v in enumerate(epoch0):
+        total += len(v)
+        if total == N:
+            break
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(epoch0[: cut + 1])),
+        np.sort(np.concatenate(visited_ref)),
+    )
+
+
+class ScriptedRungMove(PolicyBase):
+    """Emit an explicit-rung Decision (batch unchanged) on the first event."""
+
+    def __init__(self, m0, rung):
+        super().__init__(on_event=True)
+        self.m = m0
+        self.rung = rung
+        self.fired = False
+
+    def _decide(self, signals, clock):
+        if clock.boundary == "event" and not self.fired:
+            self.fired = True
+            return Decision(rung=self.rung, reason="evacuate")
+        return None
+
+    @property
+    def batch_size(self):
+        return self.m
+
+    def set_batch_size(self, m):
+        self.m = int(m)
+
+
+def test_explicit_rung_decision_rebuilds_feed_mid_epoch():
+    """A Decision carrying only a rung (straggler evacuation) must reshard
+    AND rebuild the prefetch feed: buffered batches were device_put on the
+    old rung's plan and must not reach the resharded step."""
+    t = _trainer(ScriptedRungMove(128, rung=0), estimator="none",
+                 elastic=MeshLadder(granule=16), data=_pow2_data(),
+                 prefetch=True)
+    visited = []
+    _record_visited(t, visited)
+    assert t.rung.index == 3  # batch 128 starts on the widest rung
+    t.inject_event("straggler")
+    t.run(1, verbose=False)
+    assert t.engine.stats.reshards == 1
+    assert t.rung.index == 0  # evacuated to the narrowest rung mid-epoch
+    ev = [a for a in t.adapt.history if a.boundary == "event"]
+    assert len(ev) == 1 and ev[0].rung == 0 and not ev[0].rescaled
+    assert sum(len(v) for v in visited) == N  # coverage unaffected
+    # both rungs compiled for the same bucket (the evacuation is mid-epoch)
+    assert set(zip(t.engine.stats.buckets, t.engine.stats.rungs)) == \
+        {(128, 3), (128, 0)}
+
+
+def test_epoch_only_policy_pays_no_tick_reads(monkeypatch):
+    """--tick-every with a policy that cannot fire on ticks (AdaBatch) must
+    not pay a per-tick device read/sync."""
+    import repro.train.loop as loop_mod
+
+    calls = []
+    real = loop_mod.read_signals
+
+    def counting(*a, **kw):
+        calls.append(kw.get("event"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(loop_mod, "read_signals", counting)
+    t = _trainer(AdaBatchPolicy(m0=32, m_max=256, resize_freq=2, granule=16),
+                 estimator="none", tick_every=4)
+    t.run(2, verbose=False)
+    assert calls == []  # no mid-epoch reads, no epoch reads (no diversity)
+
+
+def test_dropped_event_does_not_swallow_coincident_tick():
+    """An injected event the policy cannot fire on is dropped (logged, not
+    silent) and must NOT claim the boundary from a due tick."""
+    t = _trainer(ScriptedGrow(16, 64, on_tick=True),  # on_event=False
+                 estimator="none", tick_every=4, data=_pow2_data())
+    t.inject_event("straggler")  # dropped at step 1: policy is tick-only
+    t.run(1, verbose=False)
+    assert [a.boundary for a in t.adapt.history if a.boundary != "epoch"] \
+        == ["tick"]
+    assert t.adapt.batch_size == 64  # the tick still fired and resized
+
+
+def test_hysteresis_set_batch_size_syncs_held():
+    stub = _RawStub(m0=64)
+    hys = Hysteresis(stub, band=0.1)
+    clock = Clock(epoch=0, step=0, boundary="tick")
+    stub.next_raw = 512.0
+    assert hys.observe(Signals(), clock).batch_size == 512
+    hys.set_batch_size(128)  # Switch handover / Chain write-back path
+    assert hys.batch_size == 128 and stub.m == 128
+
+
+def test_deferred_resize_defers_coupled_lr():
+    """A linear-coupled grow decided off phase must keep the OLD lr on the
+    remaining old-size steps and land the rescaled lr exactly with the new
+    batch (the lr was scaled FOR that batch)."""
+    lrs_per_step = []
+
+    prog = AdaptationProgram(
+        ScriptedGrow(16, 64, on_tick=True), base_lr=0.5,
+        coupling=LrCoupling.linear(), tick_every=3, estimator="moment",
+    )
+    t = _trainer(prog, estimator="none", data=_pow2_data())
+    orig = t.engine.step
+
+    def step(state, batch, lr):
+        lrs_per_step.append((len(np.asarray(batch["x"])), float(lr)))
+        return orig(state, batch, lr)
+
+    t.engine.step = step
+    t.run(1, verbose=False)
+    # decided at step 3 (consumed 48, not % 64): steps 4 stays (16, 0.5);
+    # the switch lands at consumed 64 with the rescaled lr
+    for size, lr in lrs_per_step:
+        assert (size, lr) in ((16, 0.5), (64, 2.0)), lrs_per_step
+    assert (16, 0.5) in lrs_per_step and (64, 2.0) in lrs_per_step
+    assert lrs_per_step[3] == (16, 0.5)  # the off-phase step kept the old lr
+
+
+def test_mid_epoch_decision_changes_lr_immediately():
+    """A tick decision's lr coupling applies to the very next step, not the
+    next epoch."""
+    prog = AdaptationProgram(
+        ScriptedGrow(16, 64, on_tick=True), base_lr=0.5,
+        coupling=LrCoupling.linear(), tick_every=4, estimator="moment",
+    )
+    t = _trainer(prog, estimator="none")
+    t.run(1, verbose=False)
+    tick = [a for a in prog.history if a.boundary == "tick"][0]
+    assert tick.lr == pytest.approx(0.5 * 64 / 16)
+    assert prog.lr == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint schema: v1 (pre-redesign) restores; v2 round-trips
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointSchemas:
+    def test_shim_loads_v1_controller_dict(self):
+        c = AdaptiveBatchController(
+            make_policy("divebatch", m0=64, m_max=1024, delta=0.1,
+                        dataset_size=N, granule=16),
+            base_lr=0.5, lr_rule="linear",
+        )
+        v1 = {  # exactly what the pre-redesign controller emitted
+            "policy": {"m": 256},
+            "lr": 0.125,
+            "epoch": 5,
+            "history": [
+                {"epoch": 4, "batch_size": 256, "lr": 0.125, "diversity": 0.03,
+                 "raw_batch_size": 245.8, "rescaled": True},
+            ],
+        }
+        c.load_state_dict(v1)
+        assert c.batch_size == 256 and c.lr == 0.125 and c.epoch == 5
+        assert len(c.history) == 1 and c.history[0].raw_batch_size == 245.8
+        # and keeps adapting from the restored state
+        assert c.on_epoch_end(0.05).epoch == 5
+
+    def test_trainer_restores_pre_redesign_checkpoint(self, tmp_path):
+        """A full checkpoint whose extra.json carries the v1 controller dict
+        and a v1 cursor (no sample_index) must resume with the identical
+        remaining trajectory."""
+
+        def build(mgr):
+            return _trainer(
+                AdaptiveBatchController(
+                    make_policy("divebatch", m0=32, m_max=256, delta=0.08,
+                                dataset_size=N, granule=16),
+                    base_lr=0.5),
+                estimator="exact", ckpt=mgr)
+
+        t_full = build(None)
+        full = t_full.run(5, verbose=False)
+
+        mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+        t1 = build(mgr)
+        t1.run(3, verbose=False)
+        t1.save()
+
+        # rewrite the on-disk extra.json into the pre-redesign (v1) schema
+        step_dir = os.path.join(mgr.root, f"step_{mgr.latest_step():010d}")
+        with open(os.path.join(step_dir, "extra.json")) as f:
+            extra = json.load(f)
+        v2 = extra["controller"]
+        assert v2["version"] == 2  # what we write today
+        extra["controller"] = {
+            "policy": v2["policy"],
+            "lr": v2["lr"],
+            "epoch": v2["epoch"],
+            "history": [
+                {"epoch": a["epoch"], "batch_size": a["batch_size"],
+                 "lr": a["lr"], "diversity": a["diversity"],
+                 "raw_batch_size": a["raw_batch_size"],
+                 "rescaled": a["rescaled"]}
+                for a in v2["history"]
+            ],
+        }
+        del extra["cursor"]["sample_index"]  # v1 cursors had no such field
+        with open(os.path.join(step_dir, "extra.json"), "w") as f:
+            json.dump(extra, f)
+
+        t2 = build(mgr)
+        assert t2.resume()
+        resumed = t2.run(2, verbose=False)[3:]
+        np.testing.assert_allclose([h.val_loss for h in full[3:]],
+                                   [h.val_loss for h in resumed], rtol=1e-5)
+        assert [h.batch_size for h in full[3:]] == [h.batch_size for h in resumed]
+
+    def test_program_v2_roundtrip_with_combinators(self):
+        def make():
+            return AdaptationProgram(
+                Hysteresis(GradNoisePolicy(32, 512, granule=16, alpha=0.5),
+                           band=0.1),
+                base_lr=1.0, coupling=LrCoupling.sqrt(), tick_every=4,
+            )
+
+        p1 = make()
+        p1.observe(Signals(gns=200.0, batch_size=32),
+                   Clock(epoch=0, step=4, boundary="tick"))
+        p1.observe(Signals(diversity=0.1, gns=180.0, batch_size=p1.batch_size),
+                   Clock(epoch=0, step=8, boundary="epoch"))
+        state = p1.state_dict()
+        assert state["version"] == 2
+        p2 = make()
+        p2.load_state_dict(json.loads(json.dumps(state)))  # JSON-clean
+        assert p2.batch_size == p1.batch_size
+        assert p2.lr == p1.lr and p2.epoch == p1.epoch
+        assert len(p2.history) == len(p1.history)
+        assert p2.history[0].boundary == "tick"
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: the no-flap property
+# ---------------------------------------------------------------------------
+
+
+class _RawStub:
+    """Inner policy emitting a pre-set raw target each observation."""
+
+    def __init__(self, m0=64, granule=16, m_max=8192):
+        self.m = m0
+        self.granule = granule
+        self.m_max = m_max
+        self.next_raw = float(m0)
+        self.needs_diversity = False
+
+    def fires(self, clock):
+        return True
+
+    def observe(self, signals, clock):
+        self.m = bucket(int(max(self.next_raw, 1)), self.granule,
+                        m_max=self.m_max)
+        return Decision(batch_size=self.m, raw_batch_size=self.next_raw)
+
+    @property
+    def batch_size(self):
+        return self.m
+
+    def set_batch_size(self, m):
+        self.m = int(m)
+
+    def state_dict(self):
+        return {"m": self.m}
+
+    def load_state_dict(self, state):
+        self.m = int(state["m"])
+
+
+class TestHysteresis:
+    @given(
+        r0=st.floats(20.0, 4000.0),
+        band=st.sampled_from([0.05, 0.1, 0.2]),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_never_flaps_within_band(self, r0, band, seed):
+        """For ANY raw-estimate walk whose consecutive ratio stays within
+        [1/(1+band), 1+band] (the jitter the band is sized for), the held
+        schedule must never go A -> B -> A across consecutive boundaries."""
+        rng = np.random.default_rng(seed)
+        stub = _RawStub()
+        hys = Hysteresis(stub, band=band)
+        clock = Clock(epoch=0, step=0, boundary="tick")
+        held, r = [], float(r0)
+        for _ in range(60):
+            stub.next_raw = r
+            d = hys.observe(Signals(), clock)
+            held.append(d.batch_size)
+            r *= float(rng.uniform(1.0 / (1.0 + band), 1.0 + band))
+        for a, b, c in zip(held, held[1:], held[2:]):
+            assert not (b != a and c == a), (a, b, c, held)
+
+    def test_band_zero_passes_everything_through(self):
+        stub = _RawStub()
+        hys = Hysteresis(stub, band=0.0)
+        clock = Clock(epoch=0, step=0, boundary="tick")
+        # raw well past the sqrt(2) rounding threshold: accepted even at 0 band
+        stub.next_raw = 64.0
+        assert hys.observe(Signals(), clock).batch_size == 64
+        stub.next_raw = 256.0
+        assert hys.observe(Signals(), clock).batch_size == 256
+
+    def test_within_band_holds_and_syncs_inner(self):
+        stub = _RawStub(m0=64)
+        hys = Hysteresis(stub, band=0.1)
+        clock = Clock(epoch=0, step=0, boundary="tick")
+        stub.next_raw = 64.0
+        assert hys.observe(Signals(), clock).batch_size == 64
+        # 95 buckets to 128 (past 64*sqrt(2)=90.5) but NOT past the band edge
+        # 90.5*1.1=99.6 -> held at 64, and the inner policy is written back
+        stub.next_raw = 95.0
+        d = hys.observe(Signals(), clock)
+        assert d.batch_size == 64 and d.reason.endswith("+hold")
+        assert stub.m == 64 and hys.batch_size == 64
+        # clearing the band edge moves
+        stub.next_raw = 101.0
+        assert hys.observe(Signals(), clock).batch_size == 128
+
+
+# ---------------------------------------------------------------------------
+# other combinators
+# ---------------------------------------------------------------------------
+
+
+class TestCombinators:
+    def _tick(self, step=0, epoch=0):
+        return Clock(epoch=epoch, step=step, boundary="tick")
+
+    def test_warmup_suppresses_until_release(self):
+        inner = DiveBatchPolicy(m0=64, m_max=1024, delta=1.0, dataset_size=N,
+                                granule=16)
+        w = Warmup(inner, epochs=2)
+        assert w.observe(Signals(diversity=0.5),
+                         Clock(epoch=0, step=10, boundary="epoch")) is None
+        assert w.batch_size == 64  # untouched during warmup
+        d = w.observe(Signals(diversity=0.5),
+                      Clock(epoch=2, step=30, boundary="epoch"))
+        assert d is not None and d.batch_size > 64
+
+    def test_warmup_inside_program_still_advances_epochs(self):
+        prog = AdaptationProgram(
+            Warmup(FixedPolicy(32), epochs=3), base_lr=1.0,
+            coupling=LrCoupling(decay=step_decay(0.5, 1)),
+        )
+        prog.observe(Signals(), Clock(epoch=0, step=1, boundary="epoch"))
+        assert prog.epoch == 1 and prog.lr == 0.5  # background decay ran
+
+    def test_clamped_bounds_and_syncs_inner(self):
+        inner = _RawStub(m0=64)
+        c = Clamped(inner, m_min=32, m_max=128)
+        inner.next_raw = 4096.0
+        d = c.observe(Signals(), self._tick())
+        assert d.batch_size == 128 and inner.m == 128
+        inner.next_raw = 4.0
+        d = c.observe(Signals(), self._tick())
+        assert d.batch_size == 32 and inner.m == 32
+
+    def test_chain_merges_first_non_none_fields(self):
+        class LrOnly(PolicyBase):
+            def __init__(self):
+                super().__init__(on_tick=True)
+
+            def _decide(self, signals, clock):
+                return Decision(lr=0.01, reason="lr")
+
+            batch_size = property(lambda self: 0)
+
+            def set_batch_size(self, m):
+                pass
+
+        batch = _RawStub(m0=64)
+        batch.next_raw = 256.0
+        chain = Chain(batch, LrOnly())
+        d = chain.observe(Signals(), self._tick())
+        assert d.batch_size == 256 and d.lr == 0.01
+        assert "lr" in d.reason
+        assert chain.batch_size == 256
+        assert chain.needs_diversity is False
+
+    def test_switch_hands_over_batch_size(self):
+        a, b = FixedPolicy(32), FixedPolicy(512)
+        sw = Switch.at_epochs([2], [a, b])
+        d = sw.observe(Signals(), Clock(epoch=0, step=0, boundary="epoch"))
+        assert d.batch_size == 32
+        # at the handover the incoming policy inherits the live size: a
+        # FixedBatch keeps whatever it holds, so no teleport to 512
+        d = sw.observe(Signals(), Clock(epoch=2, step=0, boundary="epoch"))
+        assert d.batch_size == 32 and sw.batch_size == 32
+
+    def test_lr_coupling_rules(self):
+        assert LrCoupling.linear().rescale(0.1, 128, 256) == pytest.approx(0.2)
+        assert LrCoupling.sqrt().rescale(0.1, 128, 512) == pytest.approx(0.2)
+        assert LrCoupling().rescale(0.1, 128, 512) == pytest.approx(0.1)
+        with pytest.raises(ValueError, match="rule"):
+            LrCoupling(rule="cubic")
+
+
+# ---------------------------------------------------------------------------
+# signals: the GNS proxy and the single-transfer read
+# ---------------------------------------------------------------------------
+
+
+class TestSignals:
+    def test_gns_zero_for_identical_gradients(self):
+        """All samples sharing one gradient direction => tr(Sigma) ~ 0."""
+        g = {"w": jnp.ones(8)}
+        st_ = diversity.init_state(g)
+        for _ in range(4):
+            st_ = diversity.accumulate(st_, g, 16)  # moment tier statistic
+        gns = float(gns_from_accumulators(st_, "moment"))
+        assert gns == pytest.approx(0.0, abs=1e-3)
+
+    def test_gns_large_for_zero_mean_noise(self):
+        rng = np.random.default_rng(0)
+        st_ = diversity.init_state({"w": jnp.zeros(64)})
+        for _ in range(8):
+            mean_g = {"w": jnp.asarray(
+                rng.standard_normal(64).astype(np.float32) / np.sqrt(16))}
+            st_ = diversity.accumulate(st_, mean_g, 16)
+        gns = float(gns_from_accumulators(st_, "moment"))
+        assert gns > 10.0  # noise-dominated: critical batch >> 1
+
+    def test_empty_accumulators_are_degenerate_zero(self):
+        st_ = diversity.init_state({"w": jnp.zeros(4)})
+        assert float(gns_from_accumulators(st_, "moment")) == 0.0
+
+    def test_read_signals_reset_semantics(self):
+        params = {"w": jnp.ones(8)}
+        state = init_state(params, sgd())
+        state = state._replace(
+            div_state=diversity.accumulate(state.div_state, params, 16))
+        sig, kept = read_signals(state, "moment", reset=False, batch_size=16)
+        assert sig.samples == 16.0 and sig.batch_size == 16
+        assert float(kept.div_state.sample_count) == 16.0  # untouched
+        sig2, reset = read_signals(kept, "moment", reset=True)
+        assert sig2.samples == 16.0
+        assert float(reset.div_state.sample_count) == 0.0
+
+    def test_clock_rejects_unknown_boundary(self):
+        with pytest.raises(ValueError, match="boundary"):
+            Clock(epoch=0, step=0, boundary="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# gradient-noise policy end to end + estimator-tier decisions
+# ---------------------------------------------------------------------------
+
+
+def test_gradnoise_policy_trains_on_lattice():
+    t = _trainer(GradNoisePolicy(16, 256, granule=16, alpha=0.25, ema=0.3),
+                 estimator="moment")
+    hist = t.run(3, verbose=False)
+    lattice = {16 * 2 ** i for i in range(5)}
+    assert all(h.batch_size in lattice for h in hist)
+    assert all(np.isfinite(h.val_loss) for h in hist)
+    assert t.engine.stats.compiles <= t.adapt.compile_bound
+
+
+def test_decision_estimator_switches_tier_mid_run():
+    class TierSwitch(PolicyBase):
+        def _decide(self, signals, clock):
+            if clock.epoch == 1:
+                return Decision(estimator="moment", reason="tier")
+            return None
+
+        batch_size = property(lambda self: 32)
+
+        def set_batch_size(self, m):
+            pass
+
+        @property
+        def needs_diversity(self):
+            return True
+
+    t = _trainer(Chain(DiveBatchPolicy(32, 256, 0.08, N, granule=16),
+                       TierSwitch()), estimator="exact")
+    hist = t.run(3, verbose=False)
+    assert t.estimator == "moment"
+    assert t.adapt.estimator == "moment"
+    assert all(np.isfinite(h.val_loss) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# satellite: threaded prefetch (host-side gather overlap)
+# ---------------------------------------------------------------------------
+
+
+class TestThreadedPrefetch:
+    def test_trainer_trajectory_bit_identical(self):
+        t_thr = _trainer(DiveBatchPolicy(32, 256, 0.08, N, granule=16),
+                         estimator="exact", prefetch="thread")
+        h_thr = t_thr.run(3, verbose=False)
+        t_sync = _trainer(DiveBatchPolicy(32, 256, 0.08, N, granule=16),
+                          estimator="exact", prefetch=False)
+        h_sync = t_sync.run(3, verbose=False)
+        assert [h.batch_size for h in h_thr] == [h.batch_size for h in h_sync]
+        assert [h.train_loss for h in h_thr] == [h.train_loss for h in h_sync]
+        for a, b in zip(jax.tree.leaves(t_thr.state.params),
+                        jax.tree.leaves(t_sync.state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_order_and_exception_propagation(self):
+        from repro.data import prefetch
+
+        out = list(prefetch(range(7), put=lambda b: b * 2, host_overlap=True))
+        assert out == [0, 2, 4, 6, 8, 10, 12]
+
+        def boom(b):
+            if b == 3:
+                raise RuntimeError("gather failed")
+            return b
+
+        gen = prefetch(range(5), put=boom, host_overlap=True)
+        with pytest.raises(RuntimeError, match="gather failed"):
+            list(gen)
+
+    def test_early_close_stops_producer(self):
+        import threading
+
+        from repro.data import prefetch
+
+        before = threading.active_count()
+        gen = prefetch(range(10_000), put=lambda b: b, host_overlap=True)
+        assert next(gen) == 0
+        gen.close()  # the mid-epoch-resize path abandons the feed like this
+        assert threading.active_count() <= before + 1
+
+    def test_invalid_trainer_prefetch_mode_rejected(self):
+        with pytest.raises(ValueError, match="prefetch"):
+            _trainer(FixedPolicy(32), estimator="none", prefetch="turbo")
+
+
+# ---------------------------------------------------------------------------
+# loader: start_sample continuity (the cursor unit mid-epoch resize needs)
+# ---------------------------------------------------------------------------
+
+
+class TestLoaderStartSample:
+    @staticmethod
+    def _ds(n=512):
+        from repro.data import ArrayDataset
+
+        return ArrayDataset({"x": np.arange(n, dtype=np.float32).reshape(n, 1)})
+
+    def test_mixed_sizes_tile_the_permutation(self):
+        from repro.data import EpochLoader, epoch_permutation
+
+        train = self._ds(512)
+        a = list(EpochLoader(train, 16, epoch=1, seed=9))[:4]  # 64 samples
+        b = list(EpochLoader(train, 64, epoch=1, seed=9, start_sample=64))
+        perm = epoch_permutation(512, 9, 1)
+        ref = train.get(perm)["x"][:, 0]
+        got = np.concatenate([v["x"][:, 0] for v in a + b])
+        np.testing.assert_array_equal(got, ref)
+
+    def test_default_matches_start_batch(self):
+        from repro.data import EpochLoader
+
+        train = self._ds(512)
+        via_batch = list(EpochLoader(train, 32, epoch=0, seed=1, start_batch=3))
+        via_sample = list(EpochLoader(train, 32, epoch=0, seed=1, start_sample=96))
+        assert len(via_batch) == len(via_sample)
+        for x, y in zip(via_batch, via_sample):
+            np.testing.assert_array_equal(x["x"], y["x"])
+
+
+# ---------------------------------------------------------------------------
+# shim surface: FromBatchPolicy passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_from_batch_policy_state_dict_is_legacy_schema():
+    p = FromBatchPolicy(make_policy("divebatch", m0=64, m_max=512, delta=0.1,
+                                    dataset_size=N, granule=16))
+    assert p.state_dict() == {"m": 64}  # byte-compatible with v1 checkpoints
+    p.load_state_dict({"m": 128})
+    assert p.batch_size == 128 and p.inner.m == 128
+    assert p.needs_diversity and p.max_buckets == p.inner.max_buckets

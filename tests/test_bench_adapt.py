@@ -1,0 +1,32 @@
+"""CI smoke for the adapt benchmark: the `-m "not slow"`-safe variant runs
+in seconds and must emit a well-formed BENCH_adapt.json."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_adapt  # noqa: E402
+
+
+def test_bench_adapt_smoke(tmp_path):
+    out = tmp_path / "BENCH_adapt.json"
+    rows = bench_adapt.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    for kind in ("epoch_boundary", "mid_epoch_tick", "gns"):
+        r = record[kind]
+        assert r["steps_per_sec"] > 0
+        assert r["end_batch"] >= record["workload"]["granule"]
+    # the tick run genuinely adapted mid-epoch; the epoch run did not
+    assert record["mid_epoch_tick"]["mid_epoch_decisions"] > 0
+    assert record["mid_epoch_tick"]["mid_epoch_resizes"] >= 1
+    assert record["epoch_boundary"]["mid_epoch_decisions"] == 0
+    # both schedules are recorded for the GNS-vs-DiveBatch comparison
+    assert len(record["divebatch_schedule"]) == record["workload"]["epochs"]
+    assert len(record["gns_schedule"]) == record["workload"]["epochs"]
+    assert record["tick_vs_epoch_steps_per_sec"] > 0
+    names = [name for name, _, _ in rows]
+    assert {"adapt_epoch_boundary", "adapt_mid_epoch_tick",
+            "adapt_gns", "adapt_tick_overhead"} <= set(names)
