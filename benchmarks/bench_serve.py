@@ -1,0 +1,182 @@
+"""Elastic vs fixed-full-mesh continuous-batching decode throughput on the
+8-device CPU harness. Writes ``BENCH_serve.json`` at the repo root.
+
+Both arms run the SAME ramping arrival trace through the same ServeEngine /
+Scheduler; the only difference is the sharding: the fixed arm pins the full
+8-wide data-parallel mesh for every decode step (today's serve behaviour),
+the elastic arm lets a ``repro.elastic.MeshLadder`` pick the rung from the
+live slot count.  A ramping trace spends most of its steps at low
+concurrency — exactly where a full mesh pays collective/dispatch overhead
+for 1-2 live slots while the ladder runs them on 1-2 devices.
+
+Each arm drives the trace twice: pass 1 warms the (bucket, rung) compile
+caches, pass 2 is measured (tokens/s excludes compilation, like the other
+benches' warmup convention).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import time
+
+from repro.utils.xla_env import force_host_device_count
+
+# Effective only before the first jax backend init (a no-op under pytest,
+# where conftest already forced 8 devices).
+force_host_device_count(8)
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.batch_policy import num_buckets
+from repro.dist.plan import ShardingPlan, use_plan
+from repro.elastic import MeshLadder
+from repro.models import transformer as tf
+from repro.serve import Request, ServeEngine
+
+_DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+MAX_SLOTS = 8
+
+
+def _cfg():
+    return ModelConfig(
+        name="bench-serve", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
+        pattern=("attn",), param_dtype="float32", compute_dtype="float32",
+        xent_chunk=32, remat=False,
+    )
+
+
+def _trace(smoke: bool, seed: int = 0):
+    """(arrival_step, Request) pairs: the arrival gap shrinks over the trace
+    (the ramp), so concurrency climbs from ~1 toward the full slot count."""
+    rng = np.random.default_rng(seed)
+    gaps = [12, 12, 12, 12, 8, 8, 8, 8, 6, 6, 4, 4, 2, 2, 1, 1, 0, 0, 0, 0]
+    max_new = 16
+    if smoke:
+        gaps = [8, 8, 6, 6, 4, 2, 0, 0]
+        max_new = 8
+    trace, step = [], 0
+    for gap in gaps:
+        trace.append((step, Request(
+            prompt=rng.integers(1, 256, size=int(rng.integers(4, 8))).astype(np.int32),
+            max_new_tokens=max_new,
+        )))
+        step += gap
+    return trace
+
+
+def _drive(engine: ServeEngine, trace) -> tuple[list, float]:
+    """Submit each request when the engine's decode-step clock reaches its
+    arrival step; drain; return (results, wall seconds)."""
+    start = engine.stats.steps
+    pending = list(trace)
+    rids = []
+    t0 = time.time()
+    while pending or engine.busy:
+        while pending and engine.stats.steps - start >= pending[0][0]:
+            rids.append(engine.submit(pending.pop(0)[1]))
+        if not engine.step() and pending:
+            # idle gap in the arrival schedule: jump to the next arrival
+            rids.append(engine.submit(pending.pop(0)[1]))
+    wall = time.time() - t0
+    return [engine.result(rid) for rid in rids], wall
+
+
+def _serve(mode: str, smoke: bool):
+    cfg = _cfg()
+    params = tf.init_params(cfg, jax.random.key(0))
+    devices = jax.devices()
+    ladder = None
+    ctx = contextlib.nullcontext()
+    if mode == "elastic":
+        ladder = MeshLadder(devices, granule=1)
+    elif mode == "fixed":
+        mesh = jax.make_mesh((len(devices),), ("data",))
+        ctx = use_plan(ShardingPlan(mesh=mesh, tp=None))
+    else:
+        raise ValueError(mode)
+    with ctx:
+        engine = ServeEngine(cfg, params, max_slots=MAX_SLOTS, max_seq=128,
+                             elastic=ladder)
+        _drive(engine, _trace(smoke))  # pass 1: warm the compile caches
+        warm_compiles = engine.stats.compiles
+        warm_stats = engine.stats.as_dict()
+        results, wall = _drive(engine, _trace(smoke))  # pass 2: measured
+    stats = engine.stats
+    tokens = sum(r.steps for r in results)
+    return {
+        "devices": len(devices),
+        "tokens": tokens,
+        "wall_s": round(wall, 3),
+        "tokens_per_sec": round(tokens / wall, 2) if wall > 0 else 0.0,
+        "windowed_tokens_per_sec": round(stats.tokens_per_sec, 2),
+        "decode_steps": stats.steps - warm_stats["steps"],
+        "slot_steps": stats.slot_steps - warm_stats["slot_steps"],
+        "compiles": stats.compiles,
+        "compiles_in_measured_pass": stats.compiles - warm_compiles,
+        "buckets": stats.buckets,
+        "rungs": stats.rungs,
+        "reshards": stats.reshards,
+        "resizes": stats.resizes,
+        "ladder_dp": ladder.widths if ladder else None,
+        "num_rungs": ladder.num_rungs if ladder else 1,
+    }
+
+
+def run(smoke: bool = False, out_path: str | None = None):
+    """Returns benchmark CSV rows; writes the JSON record as a side effect."""
+    fixed = _serve("fixed", smoke)
+    elastic = _serve("elastic", smoke)
+
+    bound = num_buckets(MAX_SLOTS, 1) * elastic["num_rungs"]
+    ratio = elastic["tokens_per_sec"] / max(fixed["tokens_per_sec"], 1e-9)
+    record = {
+        "workload": {"task": "ramping-request-trace", "max_slots": MAX_SLOTS,
+                     "max_seq": 128, "smoke": smoke},
+        "fixed_full_mesh": fixed,
+        "elastic": elastic,
+        "elastic_vs_fixed_tokens_per_sec": round(ratio, 3),
+        "compile_bound_bucket_x_rung": bound,
+    }
+    path = os.path.abspath(out_path or _DEFAULT_OUT)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+    assert elastic["compiles"] <= bound, (elastic, bound)
+
+    rows = []
+    for name, r in (("elastic_ladder", elastic), ("fixed_full_mesh", fixed)):
+        rows.append((
+            f"serve_{name}",
+            1e6 / r["tokens_per_sec"] if r["tokens_per_sec"] else 0.0,
+            f"tokens_per_sec={r['tokens_per_sec']};compiles={r['compiles']};"
+            f"slot_steps={r['slot_steps']}",
+        ))
+    rows.append((
+        "serve_elastic_speedup", 0.0,
+        f"elastic_vs_fixed_tokens_per_sec={ratio:.3f};"
+        f"reshards={elastic['reshards']};ladder={elastic['ladder_dp']};"
+        f"json={os.path.basename(path)}",
+    ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=args.smoke, out_path=args.out):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,28 +8,29 @@ import sys
 import traceback
 
 
-def _run_elastic_subprocess():
-    """bench_elastic forces an 8-device CPU harness pre-jax-init, which must
-    not leak into the other benches' (default-device) measurements — it gets
-    its own process, exactly like the CI invocation."""
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_elastic"],
-        capture_output=True, text=True,
-    )
-    if proc.returncode:
-        sys.stderr.write(proc.stderr)  # surface the child's actual error
-        raise RuntimeError(
-            f"bench_elastic subprocess failed (exit {proc.returncode})"
+def _subprocess_module(module: str):
+    """bench_elastic/bench_serve force an 8-device CPU harness pre-jax-init,
+    which must not leak into the other benches' (default-device)
+    measurements — each gets its own process, exactly like the CI
+    invocation."""
+
+    def run():
+        proc = subprocess.run(
+            [sys.executable, "-m", module],
+            capture_output=True, text=True,
         )
-    for line in proc.stdout.splitlines():
-        parts = line.split(",", 2)
-        if len(parts) == 3:
-            name, us, derived = parts
-            yield name, float(us), derived
+        if proc.returncode:
+            sys.stderr.write(proc.stderr)  # surface the child's actual error
+            raise RuntimeError(
+                f"{module} subprocess failed (exit {proc.returncode})"
+            )
+        for line in proc.stdout.splitlines():
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                name, us, derived = parts
+                yield name, float(us), derived
 
-
-class _ElasticModule:
-    run = staticmethod(_run_elastic_subprocess)
+    return type("_SubprocessModule", (), {"run": staticmethod(run)})
 
 
 def main() -> None:
@@ -47,7 +48,8 @@ def main() -> None:
     modules = [
         ("engine", bench_engine),
         ("adapt", bench_adapt),
-        ("elastic", _ElasticModule),
+        ("elastic", _subprocess_module("benchmarks.bench_elastic")),
+        ("serve", _subprocess_module("benchmarks.bench_serve")),
         ("synthetic(fig1/2)", bench_synthetic),
         ("table1", bench_table1),
         ("table2(memory)", bench_table2_memory),

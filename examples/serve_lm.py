@@ -1,4 +1,8 @@
-"""Serving example: batched prefill+decode through the DecodeEngine.
+"""Serving example: elastic continuous batching through the ServeEngine.
+
+Requests stream in, the Scheduler admits them into pow2 slot buckets,
+retires each one at its own EOS/max-token step, and (with more than one
+device) a MeshLadder widens/narrows the mesh with the live batch.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -9,15 +13,17 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.elastic import MeshLadder
 from repro.models import transformer as tf
-from repro.serve import DecodeEngine, Request
+from repro.serve import Request, ServeEngine
 
 
 def main():
     cfg = get_config("yi-6b", reduced=True).replace(num_layers=4, d_model=128,
                                                     num_heads=4, num_kv_heads=2)
     params = tf.init_params(cfg, jax.random.key(0))
-    engine = DecodeEngine(cfg, params, max_batch=4, max_seq=256)
+    ladder = MeshLadder(granule=1) if len(jax.devices()) > 1 else None
+    engine = ServeEngine(cfg, params, max_slots=4, max_seq=256, elastic=ladder)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -31,8 +37,15 @@ def main():
     total_tokens = sum(r.steps for r in results)
     for i, r in enumerate(results[:4]):
         print(f"req {i}: {r.steps} tokens -> {r.tokens.tolist()}")
+    stats = engine.stats
     print(f"\n{len(requests)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, batch={engine.max_batch})")
+          f"({total_tokens/dt:.1f} tok/s end-to-end, "
+          f"{stats.tokens_per_sec:.1f} tok/s windowed)")
+    print(f"slots: {stats.prefills} admissions over buckets {stats.buckets}, "
+          f"{stats.slot_steps} decoded lanes for "
+          f"{total_tokens - stats.prefills} decode tokens")
+    if ladder is not None:
+        print(f"elastic: dp={ladder.widths} reshards={stats.reshards}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ from repro.adapt.program import SCHEMA_VERSION, AdaptationProgram, Applied
 from repro.adapt.signals import (
     Clock,
     Signals,
+    ThroughputWindow,
     gns_from_accumulators,
     read_signals,
 )
@@ -41,6 +42,7 @@ from repro.adapt.signals import (
 __all__ = [
     "Clock",
     "Signals",
+    "ThroughputWindow",
     "read_signals",
     "gns_from_accumulators",
     "Decision",

@@ -25,9 +25,11 @@ family adapts on, at sub-epoch granularity.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Any
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +73,9 @@ class Signals:
     gns         gradient-noise-scale proxy tr(Sigma)/||mu||^2 over the same
                 window (GradNoisePolicy's signal).
     loss        most recent per-step mean loss (already host-side).
-    throughput  engine dispatch steps/sec (host-side, free).
+    throughput  steps/sec over the trailing ThroughputWindow (host-side,
+                free; falls back to the global dispatch average before the
+                first window fills).
     batch_size  the live global batch size.
     samples     samples accumulated since the last reset (device counter,
                 rides in the same transfer as diversity/gns).
@@ -85,6 +89,63 @@ class Signals:
     batch_size: int = 0
     samples: float = 0.0
     event: str | None = None
+
+
+class ThroughputWindow:
+    """Sliding-window rate estimator: events/second over a trailing window.
+
+    ``Signals.throughput`` used to carry the engine's *global* dispatch
+    average, which dilutes a straggler or a hot streak over the whole run;
+    a policy (or the supervisor Watchdog) reacting to throughput needs the
+    recent rate.  ``add(n)`` records ``n`` events now; ``rate()`` is events
+    per second over the last ``window_s`` seconds — or over the elapsed time
+    so far when the window is not yet full, so early reads are unbiased
+    rather than deflated.  ``repro.serve`` reuses the same estimator for
+    ``ServeStats.tokens_per_sec`` (events = emitted tokens).
+
+    The clock is injectable (``clock=`` or per-call ``now=``) so the window
+    math is unit-testable without sleeping.
+    """
+
+    def __init__(self, window_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if window_s <= 0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        self.window_s = float(window_s)
+        self._clock = clock
+        self._samples: collections.deque[tuple[float, float]] = collections.deque()
+        self._start: float | None = None
+
+    def _evict(self, now: float) -> None:
+        edge = now - self.window_s
+        while self._samples and self._samples[0][0] <= edge:
+            self._samples.popleft()
+
+    def add(self, n: float = 1.0, now: float | None = None) -> None:
+        """Record ``n`` events at ``now`` (defaults to the injected clock)."""
+        now = self._clock() if now is None else float(now)
+        if self._start is None:
+            self._start = now
+        self._samples.append((now, float(n)))
+        self._evict(now)
+
+    def rate(self, now: float | None = None) -> float | None:
+        """Events/second over the trailing window; None before any event.
+
+        The denominator is ``min(window_s, now - first_event_time)`` — a
+        window that has only been filling for 2 of its 10 seconds divides by
+        2, not 10.
+        """
+        if self._start is None:
+            return None
+        now = self._clock() if now is None else float(now)
+        self._evict(now)
+        count = sum(n for _, n in self._samples)
+        span = min(self.window_s, now - self._start)
+        if span <= 0.0:
+            # all events landed at a single instant: no measurable span yet
+            return None
+        return count / span
 
 
 def gns_from_accumulators(div_state: Any, estimator: str = "moment") -> jax.Array:

@@ -391,14 +391,22 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 tokens_or_embs: jax.Array,
                 moe_groups: int = 1) -> tuple[jax.Array, PyTree]:
     """One token for every sequence in the batch. tokens: (B,1) int or
-    (B,1,d) embeddings. Returns (logits (B,1,V), updated cache)."""
+    (B,1,d) embeddings. Returns (logits (B,1,V), updated cache).
+
+    ``cache["len"]`` is either a scalar (every sequence at the same position
+    — the classic lockstep-batch regime) or a ``(B,)`` vector of PER-SLOT
+    positions (the ``repro.serve`` continuous-batching regime, where slots
+    are admitted/retired independently and each row lives on its own
+    timeline: RoPE, the ring-buffer write slot, and the validity mask are
+    all per-row)."""
     cdt = _cdtype(cfg)
     if cfg.input_mode == "tokens":
         x = embed(params["embed"], tokens_or_embs).astype(cdt)
     else:
         x = dense(params["frontend"], tokens_or_embs.astype(cdt))
     b = x.shape[0]
-    pos_now = cache["len"]  # scalar int32
+    pos_now = cache["len"]  # () int32, or (B,) int32 per-slot
+    per_slot = jnp.ndim(pos_now) == 1
     hd = cfg.resolved_head_dim
 
     def layer_body(x, layer_and_cache):
@@ -419,13 +427,23 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 q = dense(ap["q"], h).reshape(b, 1, cfg.num_heads, hd)
                 k = dense(ap["k"], h).reshape(b, 1, cfg.num_kv_heads, hd)
                 v = dense(ap["v"], h).reshape(b, 1, cfg.num_kv_heads, hd)
-                posb = jnp.full((b, 1), pos_now, jnp.int32)
+                if per_slot:
+                    posb = jnp.reshape(pos_now, (b, 1))
+                else:
+                    posb = jnp.full((b, 1), pos_now, jnp.int32)
                 q = apply_rope(q, posb, cfg.rope_theta)
                 k = apply_rope(k, posb, cfg.rope_theta)
                 s_c = lcache[f"pos{p}"]["k"].shape[1]
                 slot = jnp.mod(pos_now, s_c)  # ring buffer for windowed layers
-                kc = jax.lax.dynamic_update_slice_in_dim(lcache[f"pos{p}"]["k"], k, slot, axis=1)
-                vc = jax.lax.dynamic_update_slice_in_dim(lcache[f"pos{p}"]["v"], v, slot, axis=1)
+                if per_slot:
+                    # each row writes at its own ring slot: a batched scatter
+                    # touches B cache rows, not the whole (B, S, KV, hd) cache
+                    rows = jnp.arange(b)
+                    kc = lcache[f"pos{p}"]["k"].at[rows, slot].set(k[:, 0])
+                    vc = lcache[f"pos{p}"]["v"].at[rows, slot].set(v[:, 0])
+                else:
+                    kc = jax.lax.dynamic_update_slice_in_dim(lcache[f"pos{p}"]["k"], k, slot, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(lcache[f"pos{p}"]["v"], v, slot, axis=1)
                 n_valid = jnp.minimum(pos_now + 1, s_c)
                 # Ring buffer: windowed layers size their cache to the window,
                 # so every retained slot is attendable — mask only on validity.

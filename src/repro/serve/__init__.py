@@ -1,3 +1,24 @@
-from repro.serve.engine import DecodeEngine, Request, Result
+"""repro.serve — elastic continuous-batching serving.
 
-__all__ = ["DecodeEngine", "Request", "Result"]
+``ServeEngine`` (engine.py) mirrors the train stack: a bucketed
+``(bucket, rung)`` compile cache over jitted prefill/decode, a
+``Scheduler`` (scheduler.py) doing true continuous batching (admission
+queue, slot refill at step boundaries, per-slot EOS/max-token retirement),
+and an optional ``MeshLadder`` that co-adapts the device footprint with the
+live decode batch — reshard via ``elastic.reshard.place`` for params and
+``dist.sharding.cache_pspecs`` for the KV/SSM cache.  ``ServeStats``
+mirrors ``EngineStats``.
+"""
+
+from repro.serve.engine import ServeEngine, ServeStats, padded_prompt_len
+from repro.serve.scheduler import Admission, Request, Result, Scheduler
+
+__all__ = [
+    "ServeEngine",
+    "ServeStats",
+    "Scheduler",
+    "Admission",
+    "Request",
+    "Result",
+    "padded_prompt_len",
+]

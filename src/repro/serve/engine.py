@@ -1,93 +1,500 @@
-"""Serving engine: batched prefill + decode over the model zoo.
+"""ServeEngine — elastic continuous-batching prefill/decode.
 
-Used by examples/serve_lm.py and the inference dry-run cells. Requests are
-batched up to ``max_batch``; the engine keeps one cache per slot and steps
-all active slots together (continuous batching at step granularity — a slot
-is freed as soon as its request hits EOS/max_tokens and can be refilled on
-the next step boundary)."""
+The serving mirror of the train stack's single path: one engine, a bucketed
+``(bucket, rung)`` compile cache, and a ``MeshLadder`` that lets the live
+request load drive the device footprint — DiveBatch's rule ("run as wide as
+the batch justifies, no wider") applied to inference, where the decode batch
+ebbs with arrivals and drains exactly like the train batch ebbs with the
+diversity signal.
+
+Pieces:
+
+  * ``Scheduler`` (serve/scheduler.py) — true continuous batching: an
+    admission queue, slot free/refill at every step boundary, per-slot
+    EOS/max-token retirement.  The old chunked ``generate`` held the whole
+    chunk hostage to its longest request and kept decoding finished slots.
+  * per-slot decode — ``models/transformer.decode_step`` accepts a ``(B,)``
+    per-slot position vector (``cache["len"]``): every slot lives on its own
+    timeline, so admissions/retirements never synchronise the batch.  A
+    request is prefilled alone at a pow2-padded prompt length and its cache
+    rows are inserted into the batched cache, which makes each request's
+    output a function of the request alone — token-identical across slot
+    buckets, scheduling orders, mesh rungs, and live rung transitions (the
+    rung-golden tests assert exactly this).
+  * compile cache — decode programs are AOT-compiled per ``(bucket, rung)``
+    where ``bucket`` is the pow2 slot capacity (``core/batch_policy.bucket``
+    lattice, inactive slots masked via the per-row validity mask); prefill
+    programs per (padded prompt length, rung); insert/gather helpers per
+    shape.  Donation keeps one batched cache live.
+  * elastic rungs — ``ServeEngine(elastic=MeshLadder(...))`` picks the rung
+    from the live slot count; a rung transition re-places the params via
+    ``elastic.reshard.place`` and the KV/SSM cache via
+    ``dist.sharding.cache_pspecs``.  Without a ladder the engine runs on the
+    ambient ``dist.use_plan`` plan (the fixed-full-mesh baseline) or single
+    device.
+  * ``ServeStats`` — compiles, bucket/rung hits, reshards, resizes, and a
+    windowed tokens/s (``adapt.signals.ThroughputWindow``), mirroring
+    ``EngineStats`` for benchmarks (benchmarks/bench_serve.py) and tests.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import time
+import warnings
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adapt.signals import ThroughputWindow
 from repro.configs.base import ModelConfig
+from repro.core.batch_policy import bucket
+from repro.dist.plan import current_plan
+from repro.dist.sharding import cache_pspecs, shardings_of
+from repro.elastic import MeshLadder, place
 from repro.models import transformer as tf
+from repro.serve.scheduler import Admission, Request, Result, Scheduler
+
+PyTree = Any
+
+SAMPLERS = ("greedy", "categorical")
+
+
+def padded_prompt_len(n: int, granule: int) -> int:
+    """Smallest pow2 prompt bucket (``granule * 2^i``) holding ``n`` tokens
+    — the same lattice snap-up as the slot/batch buckets
+    (``core/batch_policy.bucket`` with an off-lattice ``m_min`` snaps UP).
+
+    Prompts are LEFT-padded to their own bucket independently of what they
+    are batched with, so a request's padding — and therefore its tokens —
+    never depends on its co-scheduled neighbours."""
+    return bucket(max(int(n), 1), max(int(granule), 1), "pow2",
+                  m_min=max(int(n), 1))
+
+
+def _slot_cache(cfg: ModelConfig, cache: PyTree, max_seq: int, plen: int) -> PyTree:
+    """Convert a batch-1 prefill cache (geometry of a ``plen`` context) to
+    one row of the batched decode cache (geometry of a ``max_seq`` context).
+
+    Full-attention layers pad with (validity-masked) zeros to the decode
+    length.  Windowed layers are ring buffers indexed by ``position % window``
+    in decode, while prefill emits the newest ``window`` entries in
+    chronological order — the roll rotates them into ring order so later
+    decode writes evict the genuinely oldest position."""
+    out = {"len": jnp.reshape(cache["len"], (1,)).astype(jnp.int32)}
+    for p in range(cfg.period):
+        if cfg.pattern[p] == "mamba":
+            out[f"pos{p}"] = cache[f"pos{p}"]  # O(1) state: row geometry already
+            continue
+        s_c = tf._cache_len_for(cfg, p, max_seq)
+
+        def fit(x):
+            length = x.shape[2]
+            if length > s_c:
+                x = x[:, :, length - s_c:]
+                length = s_c
+            if length == s_c:
+                return jnp.roll(x, plen % s_c, axis=2)
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, s_c - length)
+            return jnp.pad(x, pad)
+
+        lc = cache[f"pos{p}"]
+        out[f"pos{p}"] = {"k": fit(lc["k"]), "v": fit(lc["v"])}
+    return out
+
+
+def _insert_row(cache: PyTree, row: PyTree, j) -> PyTree:
+    """Write one slot-geometry row into batch position ``j`` of the cache
+    (leaf batch axis: 0 for the per-slot ``len`` vector, 1 after the stacked
+    repeats axis for every layer leaf)."""
+    return jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+            full, r.astype(full.dtype), j, axis=0 if full.ndim == 1 else 1
+        ),
+        cache,
+        row,
+    )
+
+
+def _gather_rows(cache: PyTree, idx) -> PyTree:
+    """Re-index the cache batch axis: ``new[i] = old[idx[i]]`` — one program
+    covers compaction (shrink), growth, and any slot permutation."""
+    return jax.tree.map(
+        lambda x: jnp.take(x, idx, axis=0 if x.ndim == 1 else 1), cache
+    )
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 32
-    eos_id: int | None = None
+class ServeStats:
+    """Observable serving behaviour (mirrors ``train.engine.EngineStats``).
+
+    ``compiles`` counts decode-step compilations — one per distinct
+    ``(bucket, rung)`` pair, so ``compiles == len(set(zip(buckets,
+    rungs)))``; ``bucket_hits``/``bucket_misses`` count decode cache
+    lookups (one per decode step).  ``prefill_compiles`` counts per-(padded
+    prompt length, rung) prefill programs, ``aux_compiles`` the
+    insert/gather helpers.  ``slot_steps`` is the total decoded lanes
+    (capacity summed over steps — the waste metric the old chunked
+    ``generate`` lost to its longest request); ``tokens`` counts tokens
+    actually delivered to requests.  ``tokens_per_sec`` is the windowed rate
+    (``adapt.signals.ThroughputWindow``), not a run-global average.
+    """
+
+    compiles: int = 0
+    bucket_hits: int = 0
+    bucket_misses: int = 0
+    prefill_compiles: int = 0
+    aux_compiles: int = 0
+    steps: int = 0
+    slot_steps: int = 0
+    tokens: int = 0
+    prefills: int = 0
+    retired: int = 0
+    reshards: int = 0
+    resizes: int = 0
+    compile_s: float = 0.0
+    dispatch_wall_s: float = 0.0
+    tokens_per_sec: float = 0.0
+    donate: bool = True
+    buckets: list[int] = dataclasses.field(default_factory=list)
+    rungs: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
-@dataclasses.dataclass
-class Result:
-    tokens: np.ndarray
-    steps: int
+class ServeEngine:
+    """Continuous-batching serving over the model zoo.
 
+    ``submit``/``step`` is the streaming interface (the benches drive
+    arrival traces through it); ``generate(requests)`` is the batch
+    convenience wrapper (submit everything, drain, collect).
+    """
 
-class DecodeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_seq: int = 1024, sampler: str = "greedy", temperature: float = 1.0):
-        self.cfg = cfg
-        self.params = params
-        self.max_batch = max_batch
-        self.max_seq = max_seq
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: PyTree,
+        *,
+        max_slots: int = 8,
+        max_seq: int = 1024,
+        sampler: str = "greedy",
+        temperature: float = 1.0,
+        seed: int = 0,
+        slot_granule: int = 1,
+        prompt_granule: int = 8,
+        elastic: MeshLadder | None = None,
+        donate: bool = True,
+        shrink_patience: int = 2,
+    ):
+        if sampler not in SAMPLERS:
+            raise ValueError(f"sampler must be one of {SAMPLERS}, got {sampler!r}")
+        self.cfg = cfg.replace(remat=False)
+        self.max_slots = int(max_slots)
+        self.max_seq = int(max_seq)
         self.sampler = sampler
-        self.temperature = temperature
+        self.temperature = float(temperature)
+        self.seed = int(seed)
+        self.prompt_granule = int(prompt_granule)
+        self.donate = bool(donate)
+        plan = current_plan()
+        if elastic is not None and plan is not None:
+            raise ValueError(
+                "ServeEngine(elastic=...) under an ambient dist plan is "
+                "ambiguous: the ladder owns the sharding plan per rung — "
+                "drop the use_plan context (or the elastic ladder)"
+            )
+        self._elastic = elastic
+        self._plan = plan
+        self._rung = elastic.rungs[0] if elastic is not None else None
+        self.sched = Scheduler(self.max_slots, granule=slot_granule)
+        self.params = place(params, self._live_plan)
+        self._cache: PyTree | None = None
+        self._bucket = 0
+        # Grow immediately, shrink only once the smaller target has held for
+        # ``shrink_patience`` consecutive boundaries — the serving analogue
+        # of adapt.Hysteresis: a retirement followed by an arrival would
+        # otherwise bounce the bucket (and with it the ladder rung) straight
+        # back, paying a resize+reshard both ways.
+        self.shrink_patience = int(shrink_patience)
+        self._shrink_streak = 0
+        self._sample = self._sampler_fn()
+        self._exes: dict[tuple, Any] = {}
+        self.stats = ServeStats(donate=self.donate)
+        self._thru = ThroughputWindow()
 
-        cfg_nr = cfg.replace(remat=False)
-        self._prefill = jax.jit(lambda p, b: tf.prefill_step(cfg_nr, p, b))
-        self._decode = jax.jit(lambda p, c, t: tf.decode_step(cfg_nr, p, c, t))
+    # -- plumbing ------------------------------------------------------------
+    @property
+    def _live_plan(self):
+        return self._rung.plan if self._rung is not None else self._plan
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
+    @property
+    def _rung_token(self):
+        return self._rung.index if self._rung is not None else None
+
+    @property
+    def rung(self):
+        """The live elastic ladder rung (None outside elastic mode)."""
+        return self._rung
+
+    @property
+    def busy(self) -> bool:
+        return self.sched.has_work
+
+    def _sampler_fn(self):
         if self.sampler == "greedy":
-            return jnp.argmax(logits[:, -1, :], axis=-1)
-        probs = jax.nn.softmax(logits[:, -1, :] / self.temperature, axis=-1)
-        return jax.random.categorical(key, jnp.log(probs + 1e-9), axis=-1)
 
-    def generate(self, requests: list[Request], seed: int = 0) -> list[Result]:
-        """Pads all prompts to a common length, prefi lls once, then decodes
-        the batch until every request is done."""
-        out: list[Result] = []
-        key = jax.random.key(seed)
-        for i in range(0, len(requests), self.max_batch):
-            chunk = requests[i : i + self.max_batch]
-            out.extend(self._generate_batch(chunk, key))
-        return out
+            def sample(logits, rids, pos):
+                return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
 
-    def _generate_batch(self, requests: list[Request], key) -> list[Result]:
-        b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        prompts = np.zeros((b, plen), np.int32)
-        for j, r in enumerate(requests):
-            prompts[j, plen - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(prompts)}
-        logits, cache = self._prefill(self.params, batch)
-        max_new = max(r.max_new_tokens for r in requests)
-        toks = np.zeros((b, max_new), np.int32)
-        done = np.zeros(b, bool)
-        steps = np.zeros(b, np.int32)
-        key, sub = jax.random.split(key)
-        nxt = self._sample(logits, sub)
-        for t in range(max_new):
-            toks[:, t] = np.asarray(nxt)
-            for j, r in enumerate(requests):
-                if not done[j]:
-                    steps[j] = t + 1
-                    if r.eos_id is not None and int(toks[j, t]) == r.eos_id:
-                        done[j] = True
-                    if t + 1 >= r.max_new_tokens:
-                        done[j] = True
-            if done.all() or plen + t + 1 >= self.max_seq:
-                break
-            logits, cache = self._decode(self.params, cache, nxt[:, None])
-            key, sub = jax.random.split(key)
-            nxt = self._sample(logits, sub)
-        return [Result(tokens=toks[j, : steps[j]], steps=int(steps[j])) for j in range(b)]
+            return sample
+        base, temp = self.seed, self.temperature
+
+        def sample(logits, rids, pos):
+            # per-slot keys derived from (engine seed, request id, position):
+            # sampling is deterministic per request, independent of which
+            # slot/bucket/neighbours the request happens to be batched with
+            def one(lg, rid, p):
+                k = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(base), rid), p
+                )
+                return jax.random.categorical(k, lg / temp)
+
+            return jax.vmap(one)(logits[:, -1, :], rids, pos).astype(jnp.int32)
+
+        return sample
+
+    def _decode_fn(self):
+        cfg, sample = self.cfg, self._sample
+
+        def fn(params, cache, toks, rids):
+            logits, cache = tf.decode_step(cfg, params, cache, toks)
+            return sample(logits, rids, cache["len"]), cache
+
+        return fn
+
+    def _prefill_fn(self, plen: int):
+        cfg, sample, max_seq = self.cfg, self._sample, self.max_seq
+
+        def fn(params, toks, rid):
+            logits, cache = tf.prefill_step(cfg, params, {"tokens": toks})
+            row = _slot_cache(cfg, cache, max_seq, plen)
+            return sample(logits, rid[None], row["len"]), row
+
+        return fn
+
+    def _cache_shardings(self, tree):
+        plan = self._live_plan
+        if plan is None:
+            return None
+        return shardings_of(cache_pspecs(tree, plan), plan)
+
+    def _place_cache(self, cache: PyTree) -> PyTree:
+        """KV/SSM cache onto the live plan via ``dist.sharding.cache_pspecs``
+        (batch rows over dp, kv-heads over tp; plan-free = leave as is)."""
+        sh = self._cache_shardings(cache)
+        return cache if sh is None else jax.device_put(cache, sh)
+
+    def _exe(self, key, fn, args, *, donate=(), out_pin=None, kind="aux"):
+        """AOT-compiled program for ``key`` (mirrors StepEngine._executable:
+        exact compile accounting, sharding-exact executables).  ``fn`` and
+        ``out_pin`` are zero-arg thunks so a cache hit — the per-step hot
+        path — pays one dict lookup, not a retrace/sharding-inference;
+        ``out_pin`` pins cache outputs to the canonical cache_pspecs
+        shardings so every program on a rung agrees on the cache layout."""
+        if key in self._exes:
+            if kind == "decode":
+                self.stats.bucket_hits += 1
+            return self._exes[key]
+        if kind == "decode":
+            self.stats.bucket_misses += 1
+        fn = fn()
+        kwargs = {}
+        if donate and self.donate:
+            kwargs["donate_argnums"] = donate
+        if out_pin is not None and self._live_plan is not None:
+            pin = out_pin()
+            if pin is not None:
+                kwargs["out_shardings"] = pin
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # a grow-gather's donated (smaller) cache cannot alias the larger
+            # output — partial donation is expected there, not a leak
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            exe = jax.jit(fn, **kwargs).lower(*args).compile()
+        self.stats.compile_s += time.perf_counter() - t0
+        if kind == "decode":
+            self.stats.compiles += 1
+            self.stats.buckets.append(self._bucket)
+            self.stats.rungs.append(self._rung_token)
+        elif kind == "prefill":
+            self.stats.prefill_compiles += 1
+        else:
+            self.stats.aux_compiles += 1
+        self._exes[key] = exe
+        return exe
+
+    # -- elastic -------------------------------------------------------------
+    def _ensure_rung(self) -> None:
+        """Move params + cache onto the ladder rung for the live slot count
+        (no-op off-ladder or on an unchanged rung)."""
+        if self._elastic is None:
+            return
+        rung = self._elastic.rung_for_batch(max(self._bucket, 1))
+        if rung.index == self._rung.index:
+            return
+        self._rung = rung
+        self.params = place(self.params, rung.plan)
+        if self._cache is not None:
+            self._cache = self._place_cache(self._cache)
+        self.stats.reshards += 1
+
+    def _resize(self, target: int) -> None:
+        """Track the scheduler's pow2 slot capacity: grow/shrink the batched
+        cache (compacting live rows via the scheduler's gather map), then
+        follow with the rung transition."""
+        if target == self._bucket:
+            return
+        idx = self.sched.resize(target)
+        old = self._bucket
+        self._bucket = target
+        if target == 0:
+            self._cache = None
+            return
+        self.stats.resizes += 1
+        if self._cache is None:
+            self._ensure_rung()
+            cache = tf.init_cache(self.cfg, target, self.max_seq)
+            cache["len"] = jnp.zeros((target,), jnp.int32)  # per-slot timeline
+            self._cache = self._place_cache(cache)
+            return
+        idx_arr = np.asarray(idx, np.int32)
+        exe = self._exe(
+            ("gather", old, target, self._rung_token), lambda: _gather_rows,
+            (self._cache, idx_arr), donate=(0,),
+            out_pin=lambda: self._cache_shardings(
+                jax.eval_shape(_gather_rows, self._cache, idx_arr)
+            ),
+        )
+        self._cache = exe(self._cache, idx_arr)
+        self._ensure_rung()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its id (``result(rid)`` after drain)."""
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        plen = padded_prompt_len(len(prompt), self.prompt_granule)
+        if plen > self.max_seq:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens pads to {plen} > max_seq "
+                f"{self.max_seq}"
+            )
+        # token 1 comes from prefill (no cache write); token k >= 2 writes
+        # position plen + k - 2, which must stay inside the cache
+        budget = min(int(request.max_new_tokens), self.max_seq - plen + 1)
+        return self.sched.submit(request, budget=budget)
+
+    def _prefill_into(self, adm: Admission) -> None:
+        prompt = np.asarray(adm.request.prompt, np.int32).reshape(-1)
+        plen = padded_prompt_len(len(prompt), self.prompt_granule)
+        toks = np.zeros((1, plen), np.int32)
+        if len(prompt):
+            toks[0, plen - len(prompt):] = prompt  # left-pad
+        rid = np.asarray(adm.rid, np.int32)
+        fn = self._prefill_fn(plen)
+        exe = self._exe(
+            ("prefill", plen, self._rung_token), lambda: fn,
+            (self.params, toks, rid),
+            out_pin=lambda: (None, self._cache_shardings(
+                jax.eval_shape(fn, self.params, toks, rid)[1]
+            )),
+            kind="prefill",
+        )
+        tok, row = exe(self.params, toks, rid)
+        j = np.asarray(adm.slot, np.int32)
+        iexe = self._exe(
+            ("insert", self._bucket, self._rung_token), lambda: _insert_row,
+            (self._cache, row, j), donate=(0,),
+            out_pin=lambda: self._cache_shardings(self._cache),
+        )
+        self._cache = iexe(self._cache, row, j)
+        self.stats.prefills += 1
+        self.stats.tokens += 1
+        self._thru.add(1.0)
+        rate = self._thru.rate()
+        if rate is not None:  # prefill tokens count toward the live rate too
+            self.stats.tokens_per_sec = rate
+        self.sched.record(adm.slot, int(np.asarray(tok)[0]))
+
+    def _admit(self) -> None:
+        while True:
+            adms = self.sched.admit()
+            if not adms:
+                return
+            for adm in adms:  # an instant (EOS-at-prefill) retirement frees
+                self._prefill_into(adm)  # its slot; the loop re-admits
+
+    # -- the serving step ----------------------------------------------------
+    def step(self) -> bool:
+        """One boundary (retire happened in the previous step's records ->
+        resize -> reshard -> admit) plus one decode step over the slot
+        table.  Returns False once fully drained."""
+        sch = self.sched
+        if not sch.has_work:
+            return False
+        target = sch.target_slots()
+        if 0 < target < self._bucket:
+            self._shrink_streak += 1
+            if self._shrink_streak <= self.shrink_patience:
+                target = self._bucket  # ride out a transient dip
+        else:
+            self._shrink_streak = 0
+        if target != self._bucket:
+            self._shrink_streak = 0
+        self._resize(target)
+        self._admit()
+        self.stats.retired = sch.retired  # prefill-instant retirements count
+        live = sch.live_slots()
+        if not live:  # everything admitted retired at prefill
+            return True
+        toks = sch.next_tokens()[:, None]
+        rids = sch.slot_rids()
+        exe = self._exe(
+            ("decode", self._bucket, self._rung_token), self._decode_fn,
+            (self.params, self._cache, toks, rids), donate=(1,),
+            out_pin=lambda: (None, self._cache_shardings(self._cache)),
+            kind="decode",
+        )
+        t0 = time.perf_counter()
+        nxt, self._cache = exe(self.params, self._cache, toks, rids)
+        self.stats.dispatch_wall_s += time.perf_counter() - t0
+        nxt = np.asarray(nxt)  # the per-step host transfer: one (B,) vector
+        self.stats.steps += 1
+        self.stats.slot_steps += self._bucket
+        for slot, _ in live:
+            sch.record(slot, int(nxt[slot]))
+        self.stats.tokens += len(live)
+        self.stats.retired = sch.retired
+        self._thru.add(float(len(live)))
+        rate = self._thru.rate()
+        if rate is not None:
+            self.stats.tokens_per_sec = rate
+        return True
+
+    def drain(self) -> None:
+        while self.step():
+            pass
+
+    def result(self, rid: int) -> Result:
+        return self.sched.result(rid)
+
+    def generate(self, requests: list[Request]) -> list[Result]:
+        """Submit, drain, and collect — results in request order."""
+        rids = [self.submit(r) for r in requests]
+        self.drain()
+        return [self.sched.result(rid) for rid in rids]

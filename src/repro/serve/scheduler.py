@@ -1,0 +1,203 @@
+"""Continuous-batching scheduler: admission queue + slot table.
+
+The scheduler is a HOST-side, model-free object (the property tests drive it
+with synthetic token streams and no jax at all).  It owns the request
+lifecycle; the :class:`~repro.serve.engine.ServeEngine` owns the device
+mirror (the batched KV/SSM cache) and drives the scheduler in boundary
+phases between decode steps:
+
+  1. retirement happened during the previous step's ``record`` calls;
+  2. ``target_slots()`` -> ``resize(n)``: the slot capacity tracks the
+     runnable request count on the pow2 lattice (``core/batch_policy.bucket``
+     — the serving analogue of the train-side compile buckets), and a shrink
+     compacts live slots into the low indices (``resize`` returns the gather
+     map the engine applies to the cache rows);
+  3. ``admit()``: free slots are refilled FIFO from the queue — a mid-batch
+     EOS no longer wastes its lane until the whole chunk drains;
+  4. one decode step for the whole slot table; ``record(slot, token)``
+     appends each live slot's token and retires the slot the moment its
+     request hits EOS or its token budget.
+
+Invariants (property-tested in tests/test_serve_sched.py): a slot is never
+double-assigned, no submitted request is ever dropped, every request retires
+at exactly its EOS/max-token step, and every capacity the scheduler asks for
+lies on the pow2 slot lattice.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core.batch_policy import bucket
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    steps: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """One queue->slot assignment handed back by ``admit()``."""
+
+    slot: int
+    rid: int
+    request: Request
+
+
+def slots_for(need: int, granule: int, max_slots: int) -> int:
+    """Smallest pow2-lattice slot count covering ``need``, capped at the
+    largest lattice point <= ``max_slots`` (requests beyond the cap wait in
+    the queue).  Always >= any live count that fit under the cap before."""
+    if need <= 0:
+        return 0
+    cap = bucket(max_slots, granule, "pow2", m_max=max_slots)
+    n = min(need, cap)
+    s = bucket(n, granule, "pow2", m_max=cap)
+    while s < n and s * 2 <= cap:
+        s *= 2
+    return s
+
+
+class Scheduler:
+    """Admission queue + slot table for continuous-batching decode."""
+
+    def __init__(self, max_slots: int, *, granule: int = 1):
+        if granule < 1 or max_slots < granule:
+            raise ValueError(
+                f"need max_slots >= granule >= 1, got {max_slots}, {granule}"
+            )
+        self.max_slots = int(max_slots)
+        self.granule = int(granule)
+        self._queue: collections.deque[int] = collections.deque()
+        self._reqs: dict[int, Request] = {}
+        self._budget: dict[int, int] = {}
+        self._tokens: dict[int, list[int]] = {}
+        self._slots: list[int | None] = []
+        self._done: dict[int, Result] = {}
+        self._next_rid = 0
+        self.submitted = 0
+        self.retired = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def submit(self, request: Request, *, budget: int | None = None) -> int:
+        """Queue a request; ``budget`` caps its total emitted tokens (the
+        engine passes ``min(max_new_tokens, cache headroom)``)."""
+        budget = request.max_new_tokens if budget is None else int(budget)
+        if budget < 1:
+            raise ValueError(f"token budget must be >= 1, got {budget}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._reqs[rid] = request
+        self._budget[rid] = budget
+        self._tokens[rid] = []
+        self._queue.append(rid)
+        self.submitted += 1
+        return rid
+
+    def target_slots(self) -> int:
+        """The pow2-lattice capacity for the current runnable load."""
+        return slots_for(self.live + self.pending, self.granule, self.max_slots)
+
+    def resize(self, n: int) -> list[int]:
+        """Set the capacity to ``n``, compacting live slots into the low
+        indices (slot order preserved).  Returns, per NEW slot, the OLD slot
+        index whose device row it should take (free slots map to row 0 — the
+        engine's cache gather needs a valid index; the row content of a free
+        slot is never read)."""
+        live = [(i, rid) for i, rid in enumerate(self._slots) if rid is not None]
+        if n < len(live):
+            raise ValueError(f"cannot shrink to {n} slots with {len(live)} live")
+        idx = [i for i, _ in live] + [0] * (n - len(live))
+        self._slots = [rid for _, rid in live] + [None] * (n - len(live))
+        return idx
+
+    def admit(self) -> list[Admission]:
+        """Fill free slots FIFO from the queue (one pass; callers loop when
+        an admission retires instantly and frees its slot again)."""
+        out: list[Admission] = []
+        for i, rid in enumerate(self._slots):
+            if rid is None and self._queue:
+                nrid = self._queue.popleft()
+                self._slots[i] = nrid
+                out.append(Admission(slot=i, rid=nrid, request=self._reqs[nrid]))
+        return out
+
+    def record(self, slot: int, token: int) -> bool:
+        """Append ``token`` to the request in ``slot``; retire the slot (and
+        return True) the moment the request hits EOS or its budget."""
+        rid = self._slots[slot]
+        if rid is None:
+            raise ValueError(f"slot {slot} is free; cannot record a token")
+        token = int(token)
+        toks = self._tokens[rid]
+        toks.append(token)
+        req = self._reqs[rid]
+        done = (req.eos_id is not None and token == req.eos_id) or (
+            len(toks) >= self._budget[rid]
+        )
+        if done:
+            self._done[rid] = Result(
+                tokens=np.asarray(toks, np.int32), steps=len(toks)
+            )
+            self._slots[slot] = None
+            self.retired += 1
+        return done
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def live(self) -> int:
+        return sum(1 for rid in self._slots if rid is not None)
+
+    @property
+    def capacity(self) -> int:
+        return len(self._slots)
+
+    @property
+    def has_work(self) -> bool:
+        return self.live > 0 or self.pending > 0
+
+    def live_slots(self) -> list[tuple[int, int]]:
+        """[(slot, rid)] for every occupied slot, in slot order."""
+        return [(i, rid) for i, rid in enumerate(self._slots) if rid is not None]
+
+    def next_tokens(self) -> np.ndarray:
+        """(capacity,) int32 feed for the next decode step: each live slot's
+        last emitted token; 0 for free (padded) lanes."""
+        out = np.zeros(len(self._slots), np.int32)
+        for i, rid in enumerate(self._slots):
+            if rid is not None:
+                out[i] = self._tokens[rid][-1]
+        return out
+
+    def slot_rids(self) -> np.ndarray:
+        """(capacity,) int32 request ids per slot (0 for free lanes) — the
+        per-slot sampling-key material fed into the decode program."""
+        out = np.zeros(len(self._slots), np.int32)
+        for i, rid in enumerate(self._slots):
+            if rid is not None:
+                out[i] = rid
+        return out
+
+    def result(self, rid: int) -> Result:
+        if rid not in self._done:
+            raise KeyError(f"request {rid} has not finished")
+        return self._done[rid]
+
+    def results(self) -> dict[int, Result]:
+        return dict(self._done)

@@ -28,6 +28,7 @@ in all three cases — that is the point.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable
 
@@ -75,13 +76,14 @@ class EngineStats:
     """Observable engine behaviour (consumed by benchmarks/ and tests).
 
     ``compiles`` counts *step* compilations — one per distinct (bucket, rung,
-    batch-signature) triple; with a fixed batch schema (the normal case) that
-    is one per (bucket, rung), so ``compiles == len(set(zip(buckets,
-    rungs)))`` and the policy's ``max_buckets`` bound applies per rung
-    (``max_buckets * num_rungs`` worst case, one per bucket when the rung is
-    a function of the bucket). ``bucket_hits``/``bucket_misses`` count cache
-    lookups; ``buckets`` lists the bucket key of each compile in order (a
-    key repeats only if the batch schema or rung changed within a bucket);
+    tier, batch-signature) tuple; with a fixed batch schema (the normal case)
+    that is one per (bucket, rung, tier), so ``compiles ==
+    len(set(zip(buckets, rungs, tiers)))`` and the policy's ``max_buckets``
+    bound applies per (rung, tier) — ``max_buckets * num_rungs * num_tiers``
+    worst case, one per bucket when rung and tier are functions of the
+    bucket/run. ``bucket_hits``/``bucket_misses`` count cache lookups;
+    ``buckets`` lists the bucket key of each compile in order (a key repeats
+    only if the batch schema, rung, or tier changed within a bucket);
     ``reshards`` counts rung transitions applied to the engine-owned state.
     """
 
@@ -104,6 +106,11 @@ class EngineStats:
     # bucket when the rung is a pure function of the bucket (a MeshLadder
     # driven by the same granule as the batch policy).
     rungs: list = dataclasses.field(default_factory=list)
+    # the estimator-tier token active at each compile, parallel to
+    # ``buckets`` (None for engines whose build is not tier-parameterised).
+    # A Decision.estimator flip is a new cache key, not an engine rebuild:
+    # flipping back onto an already-compiled (bucket, rung, tier) is a hit.
+    tiers: list = dataclasses.field(default_factory=list)
 
     @property
     def dispatch_steps_per_sec(self) -> float:
@@ -121,7 +128,12 @@ class StepEngine:
     ``build_step(key)`` returns the (untraced) step function for one bucket
     key; ``bucket_of(batch)`` maps a host batch to its key (default: the
     leading dim of the first leaf, which the batch policies already snap to
-    the pow2 lattice).
+    the pow2 lattice).  ``build_step`` may instead take ``(key, tier)`` —
+    then the engine is *tier-parameterised*: setting ``engine.tier`` keys
+    the compile cache by (bucket, rung, tier), so a ``Decision.estimator``
+    flip compiles the new tier's buckets on first use and every flip back
+    onto a seen tier is a cache hit (the old behaviour rebuilt the whole
+    jit family per flip).
     """
 
     def __init__(
@@ -135,6 +147,22 @@ class StepEngine:
         eval_fn: Callable | None = None,
     ):
         self._build = build_step
+        try:
+            sig_params = inspect.signature(build_step).parameters.values()
+            # only genuinely positional parameters count — a (key, **opts)
+            # or keyword-only second arg cannot receive a positional tier
+            n_params = sum(
+                1 for p in sig_params
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            )
+        except (TypeError, ValueError):  # builtins/partials without signature
+            n_params = 1
+        #: whether build_step accepts a tier argument (see class docstring)
+        self.tiered = n_params >= 2
+        # The active estimator-tier token (any hashable; the Trainer uses the
+        # tier name). Part of the executable cache key exactly like ``rung``.
+        # None = the build's own default tier (non-tiered engines stay None).
+        self.tier = None
         self._bucket_of = bucket_of or (
             lambda batch: int(jax.tree.leaves(batch)[0].shape[0])
         )
@@ -148,7 +176,7 @@ class StepEngine:
         self.donate = donate
         self._in_shardings = in_shardings
         self._out_shardings = out_shardings
-        self._jits: dict[int, Callable] = {}
+        self._jits: dict[tuple, Callable] = {}
         self._compiled: dict[tuple, Callable] = {}
         self._eval_fn = eval_fn
         self._eval_jit = None
@@ -156,9 +184,16 @@ class StepEngine:
 
     # -- compile cache -------------------------------------------------------
     def jitted(self, key: int) -> Callable:
-        """The jax.jit-wrapped step for bucket ``key`` (not yet compiled —
-        AOT callers like the dry-run lower/compile it themselves)."""
-        if key not in self._jits:
+        """The jax.jit-wrapped step for bucket ``key`` at the active tier
+        (not yet compiled — AOT callers like the dry-run lower/compile it
+        themselves)."""
+        if self.tier is not None and not self.tiered:
+            raise ValueError(
+                "engine.tier was set but build_step takes no tier argument; "
+                "tier flips on hand-built engines need a (key, tier) build"
+            )
+        jkey = (key, self.tier)
+        if jkey not in self._jits:
             kwargs = {}
             if self._in_shardings is not None:
                 kwargs["in_shardings"] = self._in_shardings
@@ -166,18 +201,21 @@ class StepEngine:
                 kwargs["out_shardings"] = self._out_shardings
             if self.donate:
                 kwargs["donate_argnums"] = (0,)
-            self._jits[key] = jax.jit(self._build(key), **kwargs)
-        return self._jits[key]
+            fn = self._build(key, self.tier) if self.tiered else self._build(key)
+            self._jits[jkey] = jax.jit(fn, **kwargs)
+        return self._jits[jkey]
 
     def _executable(self, key: int, state: TrainState, batch: PyTree, lr):
         # AOT executables are shape- and sharding-exact, so the cache key
-        # carries the full batch signature and the rung, not just the bucket:
-        # batches agreeing on leading dim but differing in trailing shape /
-        # dtype / structure / mesh rung get their own compile instead of
-        # dispatching into an incompatible executable.
+        # carries the full batch signature, the rung, and the estimator tier,
+        # not just the bucket: batches agreeing on leading dim but differing
+        # in trailing shape / dtype / structure / mesh rung / step program
+        # get their own compile instead of dispatching into an incompatible
+        # executable.
         sig = (
             key,
             self.rung,
+            self.tier,
             jax.tree.structure(batch),
             tuple((leaf.shape[1:], str(leaf.dtype)) for leaf in jax.tree.leaves(batch)),
         )
@@ -193,6 +231,7 @@ class StepEngine:
         self.stats.compiles += 1
         self.stats.buckets.append(key)
         self.stats.rungs.append(self.rung)
+        self.stats.tiers.append(self.tier)
         self._compiled[sig] = compiled
         return compiled
 
@@ -250,10 +289,17 @@ class StepEngine:
         is exactly one SGD step (Algorithm 1's step granularity) and the
         compiled program is arithmetically identical to the classic
         ``value_and_grad`` + update step.
-        """
-        track = diversity_on and estimator in ("exact", "gram", "moment")
 
-        def build(key: int) -> Callable:
+        The build is tier-parameterised: the engine starts on ``estimator``
+        and a later ``engine.tier = "gram"`` (a Decision.estimator flip)
+        compiles that tier's buckets alongside the old ones — the (bucket,
+        rung, tier) cache makes the flip back a hit.
+        """
+        injit = ("exact", "gram", "moment")
+
+        def build(key: int, tier: str | None = None) -> Callable:
+            est = tier if tier is not None else estimator
+            track = diversity_on and est in injit
             return step_lib.make_train_step(
                 None,
                 optimizer,
@@ -261,14 +307,18 @@ class StepEngine:
                 dp_size=dp_size,
                 diversity_on=track,
                 loss_fn=fns.batch_loss,
-                estimator=estimator if track else "moment",
+                estimator=est if track else "moment",
                 example_loss=fns.example_loss,
                 probe_loss=fns.probe_loss,
                 probe_specs=fns.probe_specs,
                 psn_chunk=psn_chunk,
             )
 
-        return cls(build, donate=donate, eval_fn=eval_fn_for(fns))
+        eng = cls(build, donate=donate, eval_fn=eval_fn_for(fns))
+        if diversity_on and estimator in injit:
+            # name the starting tier so a flip away and back shares the key
+            eng.tier = estimator
+        return eng
 
     @classmethod
     def for_lm(
@@ -292,7 +342,7 @@ class StepEngine:
         a global batch of B sequences is ``B // micro_batch``.
         """
 
-        def build(num_micro: int) -> Callable:
+        def build(num_micro: int, tier: str | None = None) -> Callable:
             return step_lib.make_train_step(
                 cfg,
                 optimizer,
@@ -301,6 +351,7 @@ class StepEngine:
                 moe_groups=moe_groups,
                 diversity_on=diversity_on,
                 grad_accum_dtype=grad_accum_dtype,
+                **({"estimator": tier} if tier is not None else {}),
             )
 
         if micro_batch is None:
@@ -326,10 +377,15 @@ class StepEngine:
                     )
                 return max(b // micro_batch, 1)
 
-        return cls(
+        eng = cls(
             build,
             bucket_of=bucket_of,
             donate=donate,
             in_shardings=in_shardings,
             out_shardings=out_shardings,
         )
+        if diversity_on:
+            # name the default tier (make_train_step's "moment") so a flip
+            # away and back lands on the warm key, exactly like for_model_fns
+            eng.tier = "moment"
+        return eng

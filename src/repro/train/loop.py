@@ -53,7 +53,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.adapt import AdaptationProgram, Clock, Signals, read_signals
+from repro.adapt import (
+    AdaptationProgram,
+    Clock,
+    Signals,
+    ThroughputWindow,
+    read_signals,
+)
 from repro.ckpt import CheckpointManager
 from repro.core import AdaptiveBatchController, diversity
 from repro.data import ArrayDataset, Cursor, EpochLoader
@@ -145,6 +151,9 @@ class Trainer:
                 f"prefetch must be True, False, or 'thread', got {prefetch!r}"
             )
         self._prefetch = prefetch
+        # windowed steps/s for Signals.throughput: a policy reacting to a
+        # straggler sees the recent rate, not the run-global average
+        self._thru = ThroughputWindow()
         self._shardings: dict[tuple[int, int], Any] = {}
         self.engine = engine or self._build_engine(donate)
         # an injected engine may lack an eval fn; the Trainer owns the fns
@@ -255,6 +264,12 @@ class Trainer:
             )
         )
 
+    def _throughput(self) -> float:
+        """Windowed steps/s (ThroughputWindow); the run-global dispatch
+        average only before the first step lands in the window."""
+        rate = self._thru.rate()
+        return rate if rate is not None else self.engine.stats.dispatch_steps_per_sec
+
     # -- decision plumbing ----------------------------------------------------
     def _read_estimator(self) -> str:
         """The tier signals are decoded with: the in-jit tier when one is
@@ -265,9 +280,12 @@ class Trainer:
         return "moment" if self.estimator == "oracle" else "exact"
 
     def _apply_estimator(self, tier: str | None) -> None:
-        """Retarget the diversity tier from a Decision: rebuild the compiled
-        step family (stats carry over; the new tier's buckets compile on
-        first use)."""
+        """Retarget the diversity tier from a Decision.  On a
+        tier-parameterised engine this is just a new compile-cache key —
+        (bucket, rung, tier) — so the new tier's buckets compile on first
+        use and flipping back onto a seen tier is a cache hit.  Injected
+        engines with a single-argument build fall back to the old
+        rebuild-the-jit-family behaviour (stats carry over)."""
         if tier is None or tier == self.estimator:
             return
         if tier not in _INJIT_TIERS:
@@ -276,6 +294,9 @@ class Trainer:
             )
         log.info("adapt: estimator tier %s -> %s", self.estimator, tier)
         self.estimator = tier
+        if self.engine.tiered:
+            self.engine.tier = tier
+            return
         stats, rung_token = self.engine.stats, self.engine.rung
         self.engine = self._build_engine(self.engine.donate)
         self.engine.ensure_eval_fn(eval_fn_for(self.fns))
@@ -324,7 +345,7 @@ class Trainer:
         sig, self.state = read_signals(
             self.state, self._read_estimator(), reset=False,
             batch_size=bsz, loss=last_loss,
-            throughput=self.engine.stats.dispatch_steps_per_sec, event=event,
+            throughput=self._throughput(), event=event,
         )
         applied = self.adapt.observe(sig, clock)
         if applied is not None:
@@ -337,11 +358,11 @@ class Trainer:
         full-dataset diversity it recomputes at fixed params."""
         if not self.adapt.needs_diversity:
             return Signals(loss=mean_loss, batch_size=bsz,
-                           throughput=self.engine.stats.dispatch_steps_per_sec)
+                           throughput=self._throughput())
         sig, self.state = read_signals(
             self.state, self._read_estimator(), reset=True,
             batch_size=bsz, loss=mean_loss,
-            throughput=self.engine.stats.dispatch_steps_per_sec,
+            throughput=self._throughput(),
         )
         if self.estimator == "oracle":
             sig = dataclasses.replace(sig, diversity=self._oracle_diversity())
@@ -386,7 +407,8 @@ class Trainer:
             try:
                 for batch in feed:
                     self.state, metrics = self.engine.step(self.state, batch, lr)
-                    losses.append(float(metrics["loss"]))
+                    losses.append(float(metrics["loss"]))  # per-step sync
+                    self._thru.add(1.0)
                     consumed += bsz
                     self.cursor.batch_index += 1
                     self.cursor.sample_index = consumed

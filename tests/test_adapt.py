@@ -869,3 +869,71 @@ def test_from_batch_policy_state_dict_is_legacy_schema():
     p.load_state_dict({"m": 128})
     assert p.batch_size == 128 and p.inner.m == 128
     assert p.needs_diversity and p.max_buckets == p.inner.max_buckets
+
+
+# ---------------------------------------------------------------------------
+# satellite: windowed throughput (Signals.throughput / ServeStats reuse)
+# ---------------------------------------------------------------------------
+
+
+class TestThroughputWindow:
+    def test_partial_window_divides_by_elapsed(self):
+        from repro.adapt import ThroughputWindow
+
+        w = ThroughputWindow(window_s=10.0, clock=lambda: 0.0)
+        assert w.rate(now=0.0) is None  # nothing measured yet
+        w.add(5, now=0.0)
+        assert w.rate(now=0.0) is None  # zero span: rate undefined, not inf
+        w.add(5, now=5.0)
+        # 10 events over the 5 s elapsed so far — NOT diluted over the
+        # still-unfilled 10 s window
+        assert w.rate(now=5.0) == pytest.approx(2.0)
+
+    def test_old_events_fall_out_of_the_window(self):
+        from repro.adapt import ThroughputWindow
+
+        w = ThroughputWindow(window_s=10.0, clock=lambda: 0.0)
+        w.add(5, now=0.0)
+        w.add(5, now=5.0)
+        # at t=10 the t=0 burst is outside the trailing (0, 10] window: the
+        # global average would say 1.0/s, the window says 0.5/s
+        assert w.rate(now=10.0) == pytest.approx(0.5)
+        # a straggler stall shows up as a collapsing rate
+        assert w.rate(now=14.9) == pytest.approx(0.5)
+        assert w.rate(now=20.0) == pytest.approx(0.0)
+
+    def test_counts_accumulate_within_the_window(self):
+        from repro.adapt import ThroughputWindow
+
+        w = ThroughputWindow(window_s=4.0, clock=lambda: 0.0)
+        for t in range(8):
+            w.add(2, now=float(t))
+        # window (3, 7]: samples at t=4,5,6,7 -> 8 events / 4 s
+        assert w.rate(now=7.0) == pytest.approx(2.0)
+
+    def test_bad_window_raises(self):
+        from repro.adapt import ThroughputWindow
+
+        with pytest.raises(ValueError, match="window_s"):
+            ThroughputWindow(window_s=0.0)
+
+    def test_trainer_signals_carry_windowed_rate(self):
+        """Signals.throughput comes from the Trainer's ThroughputWindow (a
+        positive recent rate after any steps), not a None placeholder."""
+        seen = []
+
+        class Rec(PolicyBase):
+            def _decide(self, signals, clock):
+                seen.append(signals.throughput)
+                return None
+
+            batch_size = property(lambda self: 32)
+
+            def set_batch_size(self, m):
+                pass
+
+        t = _trainer(Rec(), estimator="none")
+        t.run(2, verbose=False)
+        assert len(seen) == 2
+        assert all(isinstance(x, float) and x > 0 for x in seen)
+        assert t._thru.rate() is not None

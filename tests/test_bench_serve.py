@@ -1,0 +1,33 @@
+"""CI smoke for the serving benchmark: the `-m "not slow"`-safe variant runs
+in seconds and must emit a well-formed BENCH_serve.json."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_serve  # noqa: E402
+
+
+def test_bench_serve_smoke(tmp_path):
+    out = tmp_path / "BENCH_serve.json"
+    rows = bench_serve.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    for kind in ("fixed_full_mesh", "elastic"):
+        r = record[kind]
+        assert r["tokens_per_sec"] > 0
+        assert r["devices"] == 8  # the conftest harness
+        assert r["compiles_in_measured_pass"] == 0  # warm pass really warmed
+    el = record["elastic"]
+    assert el["ladder_dp"] == [1, 2, 4, 8]
+    assert el["compiles"] <= record["compile_bound_bucket_x_rung"]
+    assert len(el["rungs"]) == el["compiles"]
+    # the ramping trace genuinely moved across rungs
+    assert el["reshards"] >= 2 and len(set(el["rungs"])) >= 2
+    # both arms decode the same trace: identical lane counts
+    assert el["slot_steps"] == record["fixed_full_mesh"]["slot_steps"]
+    assert record["elastic_vs_fixed_tokens_per_sec"] > 0
+    names = [name for name, _, _ in rows]
+    assert "serve_elastic_ladder" in names and "serve_fixed_full_mesh" in names

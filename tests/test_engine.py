@@ -273,6 +273,86 @@ def test_estimator_tiers_in_jit_consistent():
     assert deltas["moment"] > 0
 
 
+def test_estimator_tier_flips_key_the_compile_cache():
+    """(bucket, rung, tier) cache: a Decision.estimator flip compiles the
+    new tier's bucket once, and flipping BACK onto a seen tier is a cache
+    hit, not a recompile (closes the ROADMAP open item)."""
+    train, _, _ = sigmoid_synthetic(n=512, d=32, seed=0)
+    eng = StepEngine.for_model_fns(_fns(), sgd(), estimator="exact",
+                                   donate=False)
+    assert eng.tiered and eng.tier == "exact"
+    params = small.mlp_init(jax.random.key(0), 32)
+    batch = {k: jnp.asarray(v) for k, v in train.get(np.arange(64)).items()}
+    state = init_state(params, sgd())
+    state, _ = eng.step(state, batch, 0.1)
+    eng.tier = "moment"
+    state, _ = eng.step(state, batch, 0.1)
+    assert eng.stats.compiles == 2
+    eng.tier = "exact"
+    state, _ = eng.step(state, batch, 0.1)
+    assert eng.stats.compiles == 2 and eng.stats.bucket_hits == 1
+    assert eng.stats.tiers == ["exact", "moment"]
+    # the tier-extended accounting bound
+    assert eng.stats.compiles == len(
+        set(zip(eng.stats.buckets, eng.stats.rungs, eng.stats.tiers))
+    )
+
+
+def test_trainer_tier_flip_keeps_engine_and_cache():
+    """On a tiered engine the Trainer applies a Decision.estimator by
+    setting ``engine.tier`` — same engine object, jit family intact."""
+    train, val, _ = sigmoid_synthetic(n=512, d=16, seed=0)
+    fns = ModelFns(batch_loss=small.logreg_batch_loss,
+                   example_loss=small.logreg_loss)
+    t = Trainer(fns, small.logreg_init(jax.random.key(0), 16), sgd(),
+                _controller(m0=32, m_max=64), train, val, estimator="exact")
+    engine = t.engine
+    t.run(1, verbose=False)
+    jits_before = dict(engine._jits)
+    t._apply_estimator("moment")
+    assert t.engine is engine and engine.tier == "moment"
+    assert t.estimator == "moment"
+    for key, fn in jits_before.items():  # old tier's programs stay warm
+        assert engine._jits[key] is fn
+    t.run(1, verbose=False)
+    assert set(engine.stats.tiers) == {"exact", "moment"}
+
+
+def test_kwargs_build_counts_as_untiered():
+    """Only genuinely positional parameters make a build tiered: a
+    (key, **opts) build must not be handed a positional tier argument."""
+    eng = StepEngine(
+        lambda key, **opts: make_train_step(
+            None, sgd(), num_micro=1,
+            loss_fn=lambda p, b: jnp.sum(p["w"] * b["x"]),
+            diversity_on=False)
+    )
+    assert not eng.tiered
+    eng.jitted(1)  # would TypeError if misclassified as tiered
+
+
+def test_for_lm_names_its_default_tier():
+    """for_lm seeds engine.tier with the starting tier so a flip away and
+    back is a cache hit, matching for_model_fns."""
+    assert StepEngine.for_lm(None, sgd(), micro_batch=32).tier == "moment"
+    assert StepEngine.for_lm(None, sgd(), micro_batch=32,
+                             diversity_on=False).tier is None
+
+
+def test_untiered_build_rejects_tier():
+    """A hand-built engine whose build takes only (key) cannot honor a tier
+    token — setting one must fail loudly, not silently ignore the flip."""
+    eng = StepEngine(
+        lambda key: make_train_step(None, sgd(), num_micro=1,
+                                    loss_fn=lambda p, b: jnp.sum(p["w"]),
+                                    diversity_on=False)
+    )
+    assert not eng.tiered
+    eng.tier = "moment"
+    with pytest.raises(ValueError, match="tier"):
+        eng.jitted(1)
+
+
 def test_trainer_under_dist_plan_matches_unsharded():
     """The same Trainer/engine code runs under a dist plan (dp-sharded
     batches on the 8-device test mesh) with an equivalent trajectory."""

@@ -1,0 +1,124 @@
+"""Scheduler property tests (model-free, no jax): random arrival/length
+traces must never double-assign a slot, never drop a request, retire every
+request at exactly its EOS/max-token step, and keep every capacity on the
+pow2 slot lattice."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serve.scheduler import Request, Scheduler, slots_for
+
+EOS = 7
+
+
+def _token(rid, k, eos_at):
+    """Deterministic per-request stream; EOS exactly at the planned step."""
+    if eos_at is not None and k == eos_at:
+        return EOS
+    return 10 + (rid * 31 + k) % 900  # never collides with EOS
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999),
+       max_slots=st.sampled_from([1, 2, 3, 4, 8]),
+       granule=st.sampled_from([1, 2]))
+def test_scheduler_invariants(seed, max_slots, granule):
+    max_slots = max(max_slots, granule)
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 14))
+    reqs, eos_at = [], {}
+    for rid in range(n):
+        max_new = int(rng.integers(1, 9))
+        has_eos = bool(rng.random() < 0.5)
+        reqs.append(Request(prompt=np.zeros(4, np.int32), max_new_tokens=max_new,
+                            eos_id=EOS if has_eos else None))
+        eos_at[rid] = int(rng.integers(1, max_new + 1)) if has_eos else None
+    arrivals = sorted(int(rng.integers(0, 12)) for _ in range(n))
+
+    sched = Scheduler(max_slots, granule=granule)
+    lattice = {granule * (1 << i) for i in range(12)}
+    counts = {}  # rid -> tokens emitted so far (the test's own ledger)
+    submitted = 0
+    for t in range(10_000):
+        while submitted < n and arrivals[submitted] <= t:
+            rid = sched.submit(reqs[submitted])
+            counts[rid] = 0
+            submitted += 1
+        if submitted == n and not sched.has_work:
+            break
+        target = sched.target_slots()
+        assert target == 0 or target in lattice  # pow2 lattice, always
+        assert target <= max_slots
+        if target != sched.capacity:
+            live_before = [rid for _, rid in sched.live_slots()]
+            idx = sched.resize(target)
+            assert len(idx) == target
+            # compaction preserves the live slots and their order
+            assert [rid for _, rid in sched.live_slots()] == live_before
+            assert sched.capacity == target
+        while True:  # admissions (instant retirements free slots again)
+            adms = sched.admit()
+            if not adms:
+                break
+            taken = set()
+            for a in adms:
+                assert a.slot not in taken  # never double-assigned
+                taken.add(a.slot)
+                counts[a.rid] += 1
+                sched.record(a.slot, _token(a.rid, counts[a.rid], eos_at[a.rid]))
+        live = sched.live_slots()
+        assert len({s for s, _ in live}) == len(live)
+        assert len({r for _, r in live}) == len(live)  # one slot per request
+        for slot, rid in live:  # one decode step
+            counts[rid] += 1
+            sched.record(slot, _token(rid, counts[rid], eos_at[rid]))
+    else:
+        pytest.fail("trace did not drain")
+
+    # no request dropped; every request retired at exactly its stop step
+    assert sched.retired == n
+    assert set(sched.results()) == set(range(n))
+    for rid in range(n):
+        res = sched.result(rid)
+        expect = eos_at[rid] if eos_at[rid] is not None else reqs[rid].max_new_tokens
+        assert res.steps == expect == len(res.tokens)
+        if eos_at[rid] is not None:
+            assert res.tokens[-1] == EOS
+            assert EOS not in res.tokens[:-1]
+        else:
+            assert EOS not in res.tokens
+
+
+def test_slots_for_lattice():
+    assert slots_for(0, 1, 8) == 0
+    assert slots_for(1, 1, 8) == 1
+    assert slots_for(3, 1, 8) == 4  # ceil onto the lattice, never starve
+    assert slots_for(5, 1, 8) == 8
+    assert slots_for(9, 1, 8) == 8  # capped; the rest queue
+    assert slots_for(3, 2, 8) == 4  # granule-anchored lattice
+    assert slots_for(1, 2, 8) == 2
+    assert slots_for(7, 1, 6) == 4  # largest lattice point under a non-pow2 cap
+
+
+def test_resize_below_live_raises():
+    sched = Scheduler(4)
+    for _ in range(3):
+        sched.submit(Request(prompt=np.zeros(2, np.int32), max_new_tokens=4))
+    sched.resize(4)
+    sched.admit()
+    with pytest.raises(ValueError, match="shrink"):
+        sched.resize(2)
+
+
+def test_record_on_free_slot_raises():
+    sched = Scheduler(2)
+    sched.resize(2)
+    with pytest.raises(ValueError, match="free"):
+        sched.record(0, 5)
+
+
+def test_submit_rejects_empty_budget():
+    sched = Scheduler(2)
+    with pytest.raises(ValueError, match="budget"):
+        sched.submit(Request(prompt=np.zeros(2, np.int32), max_new_tokens=0))

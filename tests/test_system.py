@@ -183,15 +183,15 @@ class TestSupervisor:
 
 class TestServing:
     def test_greedy_decode_deterministic(self):
-        from repro.serve import DecodeEngine, Request
+        from repro.serve import Request, ServeEngine
 
         cfg = get_config("yi-6b", reduced=True)
         params = tf.init_params(cfg, jax.random.key(0))
-        eng = DecodeEngine(cfg, params, max_batch=4)
+        eng = ServeEngine(cfg, params, max_slots=4)
         reqs = [Request(prompt=np.arange(5, dtype=np.int32) + 1, max_new_tokens=8)
                 for _ in range(3)]
         r1 = eng.generate(reqs)
-        r2 = eng.generate(reqs)
+        r2 = eng.generate(reqs)  # same engine, fresh requests: warm caches
         for a, b in zip(r1, r2):
             np.testing.assert_array_equal(a.tokens, b.tokens)
             assert a.steps == 8
