@@ -1,13 +1,23 @@
-"""Elastic vs fixed-full-mesh continuous-batching decode throughput on the
-8-device CPU harness. Writes ``BENCH_serve.json`` at the repo root.
+"""Elastic vs fixed-full-mesh continuous-batching decode throughput, plus
+the paged-KV prefix-sharing section, on the 8-device CPU harness.  Writes
+``BENCH_serve.json`` at the repo root.
 
-Both arms run the SAME ramping arrival trace through the same ServeEngine /
-Scheduler; the only difference is the sharding: the fixed arm pins the full
-8-wide data-parallel mesh for every decode step (today's serve behaviour),
-the elastic arm lets a ``repro.elastic.MeshLadder`` pick the rung from the
-live slot count.  A ramping trace spends most of its steps at low
-concurrency — exactly where a full mesh pays collective/dispatch overhead
-for 1-2 live slots while the ladder runs them on 1-2 devices.
+The elastic arms run the SAME ramping arrival trace through the same
+ServeEngine / Scheduler; the only difference is the sharding: the fixed arm
+pins the full 8-wide data-parallel mesh for every decode step, the elastic
+arm lets a ``repro.elastic.MeshLadder`` pick the rung from the live slot
+count.  A ramping trace spends most of its steps at low concurrency —
+exactly where a full mesh pays collective/dispatch overhead for 1-2 live
+slots while the ladder runs them on 1-2 devices.
+
+The ``paged`` section drives a shared-system-prompt ramping trace (every
+request opens with the same prefix) through the block-pool engine twice —
+prefix sharing on vs off.  Sharing-off re-prefills every prompt in full
+(the old dense-cache engine's compute profile); sharing-on computes the
+shared prefix blocks EXACTLY ONCE and each request only its divergent tail
+(asserted).  The section also records the paged-vs-dense MEMORY footprint:
+peak live pool blocks x block size against the dense engine's
+``max_slots * max_seq`` preallocation.
 
 Each arm drives the trace twice: pass 1 warms the (bucket, rung) compile
 caches, pass 2 is measured (tokens/s excludes compilation, like the other
@@ -38,7 +48,7 @@ from repro.core.batch_policy import num_buckets
 from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
 from repro.models import transformer as tf
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, padded_prompt_len
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
@@ -131,10 +141,90 @@ def _serve(mode: str, smoke: bool):
     }
 
 
+def _shared_trace(smoke: bool, seed: int = 1):
+    """Shared-system-prompt ramp: every prompt = common prefix + distinct
+    tail, all the SAME raw length (prompts are left-padded, so equal length
+    keeps the padded streams — and their chain hashes — aligned)."""
+    rng = np.random.default_rng(seed)
+    n, raw, pre = (6, 12, 8) if smoke else (12, 24, 16)
+    max_new = 8 if smoke else 16
+    prefix = rng.integers(1, 256, size=pre).astype(np.int32)
+    trace, step = [], 0
+    for _ in range(n):
+        tail = rng.integers(1, 256, size=raw - pre).astype(np.int32)
+        trace.append((step, Request(prompt=np.concatenate([prefix, tail]),
+                                    max_new_tokens=max_new)))
+        step += 4  # staggered: the head request's prefill lands first
+    return trace, n, raw, pre
+
+
+def _paged(smoke: bool):
+    """The prefix-sharing section: sharing on vs off on the SAME trace and
+    engine geometry (both paged; sharing-off's full re-prefill per prompt is
+    the old dense engine's compute profile)."""
+    cfg = _cfg()
+    params = tf.init_params(cfg, jax.random.key(0))
+    block = 8
+    arms = {}
+    for name, sharing in (("shared_prefix", True), ("no_sharing", False)):
+        trace, n, raw, pre = _shared_trace(smoke)
+        engine = ServeEngine(cfg, params, max_slots=MAX_SLOTS, max_seq=128,
+                             prompt_granule=8, block_size=block,
+                             prefill_chunk=block, prefix_sharing=sharing)
+        _drive(engine, trace)  # pass 1: warm compiles + (if on) the registry
+        warm = engine.stats.as_dict()
+        results, wall = _drive(engine, _shared_trace(smoke)[0])  # measured
+        st = engine.stats
+        plen = padded_prompt_len(raw, 8)
+        first_chunks = plen // block
+        tail_chunks = (plen - ((plen - raw + pre) // block) * block) // block
+        if sharing:
+            # the acceptance invariant: the shared prefix prefilled ONCE —
+            # request 1 in full, every other request only its tail (pass 2
+            # replays full-prompt cache hits: zero chunks)
+            expect = first_chunks + (n - 1) * tail_chunks
+            assert st.prefill_chunks == expect, (st.prefill_chunks, expect)
+            assert st.shared_prefill_hits == n  # pass 2: all instant
+        else:
+            assert st.prefill_chunks == 2 * n * first_chunks
+        tokens = sum(r.steps for r in results)
+        arms[name] = {
+            "tokens": tokens,
+            "wall_s": round(wall, 3),
+            "tokens_per_sec": round(tokens / wall, 2) if wall > 0 else 0.0,
+            "prefill_chunks": st.prefill_chunks,
+            "prefill_chunks_measured_pass": st.prefill_chunks
+            - warm["prefill_chunks"],
+            "shared_prefill_hits": st.shared_prefill_hits,
+            "shared_blocks": st.shared_blocks,
+            "peak_blocks": st.peak_blocks,
+            "compiles_in_measured_pass": st.compiles - warm["compiles"],
+        }
+        engine.pool.check()
+        pool_blocks, cow = engine.pool.num_blocks, st.cow_copies
+    dense_tokens = MAX_SLOTS * 128  # the dense layout's per-slot max_seq rows
+    peak = max(arms[a]["peak_blocks"] for a in arms)
+    ratio = arms["shared_prefix"]["tokens_per_sec"] / max(
+        arms["no_sharing"]["tokens_per_sec"], 1e-9)
+    return {
+        "block_size": block,
+        "pool_blocks": pool_blocks,
+        "peak_blocks": peak,
+        "peak_resident_tokens": peak * block,
+        "dense_resident_tokens": dense_tokens,
+        "memory_vs_dense": round(peak * block / dense_tokens, 4),
+        "cow_copies": cow,
+        "shared_prefix": arms["shared_prefix"],
+        "no_sharing": arms["no_sharing"],
+        "sharing_vs_dense_tokens_per_sec": round(ratio, 3),
+    }
+
+
 def run(smoke: bool = False, out_path: str | None = None):
     """Returns benchmark CSV rows; writes the JSON record as a side effect."""
     fixed = _serve("fixed", smoke)
     elastic = _serve("elastic", smoke)
+    paged = _paged(smoke)
 
     bound = num_buckets(MAX_SLOTS, 1) * elastic["num_rungs"]
     ratio = elastic["tokens_per_sec"] / max(fixed["tokens_per_sec"], 1e-9)
@@ -143,6 +233,7 @@ def run(smoke: bool = False, out_path: str | None = None):
                      "max_seq": 128, "smoke": smoke},
         "fixed_full_mesh": fixed,
         "elastic": elastic,
+        "paged": paged,
         "elastic_vs_fixed_tokens_per_sec": round(ratio, 3),
         "compile_bound_bucket_x_rung": bound,
     }
@@ -165,6 +256,13 @@ def run(smoke: bool = False, out_path: str | None = None):
         f"elastic_vs_fixed_tokens_per_sec={ratio:.3f};"
         f"reshards={elastic['reshards']};ladder={elastic['ladder_dp']};"
         f"json={os.path.basename(path)}",
+    ))
+    rows.append((
+        "serve_paged_prefix_sharing", 0.0,
+        f"sharing_vs_dense_tokens_per_sec={paged['sharing_vs_dense_tokens_per_sec']};"
+        f"memory_vs_dense={paged['memory_vs_dense']};"
+        f"prefill_chunks={paged['shared_prefix']['prefill_chunks']};"
+        f"peak_blocks={paged['peak_blocks']}/{paged['pool_blocks']}",
     ))
     return rows
 

@@ -187,6 +187,12 @@ def cache_pspecs(cache: PyTree, plan: ShardingPlan) -> PyTree:
     (the cache IS the footprint there); kv_heads -> tp, falling back to
     head_dim when the head count is smaller than the tp degree.
     Mamba state leaves shard batch -> dp and d_inner -> tp.
+
+    The serve block pool (``models/transformer.init_pages``) rides the same
+    k/v rule: a pool leaf is (repeats, num_blocks, block, kv, hd), so the
+    trailing-4 convention lands the BLOCK axis on dp (the pool's capacity
+    dim, pow2-sized by the engine so it always fits the mesh) and kv heads
+    on tp — block-table gathers/scatters then address dp-local shards.
     """
 
     def rule(path: str, leaf) -> P:

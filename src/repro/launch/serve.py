@@ -77,6 +77,16 @@ def main():
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--prompt-granule", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="KV pool block size in tokens (0 = prompt granule)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="KV pool capacity in blocks (0 = worst-case for "
+                         "max_slots, pow2)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill chunk length in tokens (0 = whole prompt "
+                         "per boundary); chunks interleave with decode")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable chain-hash prompt prefix sharing")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "categorical"])
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -113,6 +123,10 @@ def main():
             sampler=args.sampler, temperature=args.temperature,
             seed=args.seed, prompt_granule=args.prompt_granule,
             elastic=ladder,
+            block_size=args.block_size or None,
+            pool_blocks=args.pool_blocks or None,
+            prefill_chunk=args.prefill_chunk,
+            prefix_sharing=not args.no_prefix_sharing,
         )
         requests = build_requests(cfg, args.requests,
                                   max_new=args.max_new, seed=args.seed)
@@ -126,6 +140,10 @@ def main():
     print(f"engine: compiles={stats.compiles} (buckets={stats.buckets} "
           f"rungs={stats.rungs}) prefill={stats.prefill_compiles} "
           f"aux={stats.aux_compiles} hits={stats.bucket_hits}")
+    print(f"pool: {stats.peak_blocks}/{stats.pool_blocks} blocks peak "
+          f"(block={stats.block_size}) chunks={stats.prefill_chunks} "
+          f"shared_hits={stats.shared_prefill_hits} "
+          f"shared_blocks={stats.shared_blocks} cow={stats.cow_copies}")
     if ladder is not None:
         print(f"elastic: ladder dp={ladder.widths} reshards={stats.reshards} "
               f"resizes={stats.resizes}")

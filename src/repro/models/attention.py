@@ -260,6 +260,40 @@ def _flash_bwd(causal, window, softcap, q_block, kv_block, res, dout):
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
+def chunk_attention(
+    q: jax.Array,  # (B, C, H, hd) — one prefill chunk of queries
+    k: jax.Array,  # (B, Sk, KV, hd) — prior context ++ this chunk's keys
+    v: jax.Array,
+    q_pos: jax.Array,  # (C,) absolute positions of the queries
+    k_pos: jax.Array,  # (Sk,) absolute positions of the keys
+    k_valid: jax.Array,  # (Sk,) bool — False for padding/garbage key rows
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention: queries at explicit absolute positions over
+    keys at explicit absolute positions with a validity mask.
+
+    This is ``attention()`` generalised to non-contiguous key layouts (prior
+    context gathered from pool blocks or a windowed ring, then this chunk's
+    own keys) — same op order as the dense oracle, so a one-chunk prefill at
+    offset 0 with all-valid keys is bit-identical to ``attention()``.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    bias = _mask_bias(q_pos, k_pos, True, window)
+    bias = jnp.where(k_valid[None, :], bias, NEG_INF)
+    logits = logits + bias[None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
 def decode_attention(
     q: jax.Array,  # (B, 1, H, hd)
     k_cache: jax.Array,  # (B, S, KV, hd)

@@ -99,14 +99,20 @@ def mamba_apply(
     dt_rank: int = 0,
     chunk: int = 256,
     return_state: bool = False,
+    state: dict | None = None,
 ):
+    """Apply the block over ``x``; ``state`` (as returned with
+    ``return_state=True`` or from ``mamba_decode_init``) resumes a sequence
+    mid-stream, so chunked prefill can feed block-sized pieces and get the
+    same result as one full-length call."""
     b, l, d_model = x.shape
     dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
     d_inner = params["A_log"].shape[0]
     xz = x @ params["in_proj"]["kernel"].astype(x.dtype)
     xi, z = jnp.split(xz, 2, axis=-1)
     xi_preconv = xi
-    xi = silu(_causal_conv(xi, params["conv_kernel"], params["conv_bias"]))
+    xi = silu(_causal_conv(xi, params["conv_kernel"], params["conv_bias"],
+                           init_state=None if state is None else state["conv"]))
 
     dt, bmat, cmat = _ssm_params(params, xi, dt_rank, d_state)
     a = -jnp.exp(params["A_log"])  # (d_inner, d_state), fp32
@@ -127,7 +133,10 @@ def mamba_apply(
         # was the dominant live buffer in the jamba train cell)
         return h_last, y_c.astype(x.dtype)
 
-    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    if state is None:
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    else:
+        h0 = state["h"].astype(jnp.float32)
     h_final, ys = jax.lax.scan(chunk_step, h0, jnp.arange(n_chunks))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, l, d_inner).astype(jnp.float32)
     y = y + params["D"][None, None] * xi.astype(jnp.float32)
@@ -135,8 +144,14 @@ def mamba_apply(
     out = y @ params["out_proj"]["kernel"].astype(x.dtype)
     if return_state:
         k = params["conv_kernel"].shape[0]
-        state = {"h": h_final, "conv": xi_preconv[:, -(k - 1):, :]}
-        return out, state
+        if state is None:
+            conv_tail = xi_preconv[:, -(k - 1):, :]
+        else:
+            # short chunks (l < K-1) still need K-1 rows of history
+            conv_tail = jnp.concatenate(
+                [state["conv"].astype(xi_preconv.dtype), xi_preconv], axis=1
+            )[:, -(k - 1):, :]
+        return out, {"h": h_final, "conv": conv_tail}
     return out
 
 

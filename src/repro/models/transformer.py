@@ -365,12 +365,18 @@ def _cache_len_for(cfg: ModelConfig, pos: int, seq_len: int) -> int:
     return seq_len
 
 
-def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
-    """Decode cache sized for a context of ``seq_len`` tokens."""
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, skip: tuple = ()) -> PyTree:
+    """Decode cache sized for a context of ``seq_len`` tokens.
+
+    ``skip`` drops pattern positions from the tree — the paged serve path
+    keeps full-attention KV in the block pool (``init_pages``) and only the
+    O(1)-per-slot state (windowed rings, SSM state, lengths) stays dense."""
     cdt = _cdtype(cfg)
     hd = cfg.resolved_head_dim
     cache: dict = {"len": jnp.zeros((), jnp.int32)}
     for p in range(cfg.period):
+        if p in skip:
+            continue
         kind = cfg.pattern[p]
         if kind == "mamba":
             d_inner = cfg.ssm_expand * cfg.d_model
@@ -387,18 +393,57 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
     return cache
 
 
+def paged_positions(cfg: ModelConfig) -> tuple[int, ...]:
+    """Pattern positions whose KV lives in the block pool when serving paged:
+    the FULL-attention positions, whose per-slot cost would otherwise be
+    O(max_seq).  Windowed rings and SSM state are already O(1) per slot and
+    stay in the dense per-slot cache."""
+    return tuple(p for p in range(cfg.period) if cfg.pattern[p] == "attn")
+
+
+def init_pages(cfg: ModelConfig, num_blocks: int, block_size: int) -> PyTree:
+    """The paged KV pool: per full-attention pattern position, a flat pool of
+    ``num_blocks`` blocks of ``block_size`` token rows, stacked over repeats
+    (same scan layout as the dense cache).  Block 0 is the sentinel — never
+    allocated, the write target of inactive lanes (see serve/blocks.py)."""
+    cdt = _cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    return {
+        f"pos{p}": {
+            "k": jnp.zeros(
+                (cfg.repeats, num_blocks, block_size, cfg.num_kv_heads, hd), cdt
+            ),
+            "v": jnp.zeros(
+                (cfg.repeats, num_blocks, block_size, cfg.num_kv_heads, hd), cdt
+            ),
+        }
+        for p in paged_positions(cfg)
+    }
+
+
 def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 tokens_or_embs: jax.Array,
-                moe_groups: int = 1) -> tuple[jax.Array, PyTree]:
+                moe_groups: int = 1, *,
+                pages: PyTree | None = None,
+                tables: jax.Array | None = None):
     """One token for every sequence in the batch. tokens: (B,1) int or
-    (B,1,d) embeddings. Returns (logits (B,1,V), updated cache).
+    (B,1,d) embeddings. Returns (logits (B,1,V), updated cache) — plus the
+    updated pages when running paged.
 
     ``cache["len"]`` is either a scalar (every sequence at the same position
     — the classic lockstep-batch regime) or a ``(B,)`` vector of PER-SLOT
     positions (the ``repro.serve`` continuous-batching regime, where slots
     are admitted/retired independently and each row lives on its own
     timeline: RoPE, the ring-buffer write slot, and the validity mask are
-    all per-row)."""
+    all per-row).
+
+    Paged regime (``pages``/``tables`` given): full-attention positions read
+    and write the block pool instead of a dense per-slot cache.  ``tables``
+    is ``(B, n_max)`` int32 — slot b's logical block i lives at pool block
+    ``tables[b, i]`` — so each row writes its current token at
+    ``tables[b, pos // block]`` offset ``pos % block`` and reads its whole
+    context through a table gather.  Inactive lanes point at sentinel block
+    0 (written garbage, masked by the validity count on read)."""
     cdt = _cdtype(cfg)
     if cfg.input_mode == "tokens":
         x = embed(params["embed"], tokens_or_embs).astype(cdt)
@@ -408,10 +453,11 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
     pos_now = cache["len"]  # () int32, or (B,) int32 per-slot
     per_slot = jnp.ndim(pos_now) == 1
     hd = cfg.resolved_head_dim
+    pages_in = pages if pages is not None else {}
 
-    def layer_body(x, layer_and_cache):
-        layer, lcache = layer_and_cache
-        new_cache = {}
+    def layer_body(x, scanned):
+        layer, lcache, lpages = scanned
+        new_cache, new_pages = {}, {}
         for p in range(cfg.period):
             kind = cfg.pattern[p]
             blk = layer[f"pos{p}"]
@@ -422,6 +468,30 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                     d_state=cfg.ssm_state, dt_rank=cfg.dt_rank,
                 )
                 new_cache[f"pos{p}"] = new_state
+            elif f"pos{p}" in pages_in:
+                ap = blk["attn"]
+                q = dense(ap["q"], h).reshape(b, 1, cfg.num_heads, hd)
+                k = dense(ap["k"], h).reshape(b, 1, cfg.num_kv_heads, hd)
+                v = dense(ap["v"], h).reshape(b, 1, cfg.num_kv_heads, hd)
+                posv = (jnp.reshape(pos_now, (b,)) if per_slot
+                        else jnp.full((b,), pos_now, jnp.int32))
+                q = apply_rope(q, posv[:, None], cfg.rope_theta)
+                k = apply_rope(k, posv[:, None], cfg.rope_theta)
+                pk, pv = lpages[f"pos{p}"]["k"], lpages[f"pos{p}"]["v"]
+                blk_sz = pk.shape[1]
+                rows = jnp.arange(b)
+                wb = tables[rows, posv // blk_sz]  # (B,) pool block per row
+                off = jnp.mod(posv, blk_sz)
+                pk = pk.at[wb, off].set(k[:, 0])
+                pv = pv.at[wb, off].set(v[:, 0])
+                # write-then-read: the gathered view includes this token
+                gk = jnp.take(pk, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
+                gv = jnp.take(pv, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
+                h = attn_lib.decode_attention(
+                    q, gk, gv, posv + 1, softcap=cfg.attn_softcap, window=None,
+                )
+                h = dense(ap["o"], h.reshape(b, 1, cfg.num_heads * hd))
+                new_pages[f"pos{p}"] = {"k": pk, "v": pv}
             else:
                 ap = blk["attn"]
                 q = dense(ap["q"], h).reshape(b, 1, cfg.num_heads, hd)
@@ -457,17 +527,21 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 h = _norm(cfg, blk["ffn_norm"], x)
                 h, _ = _ffn_sublayer(cfg, blk["ffn"], x=h, kind=cfg.ffn_kind(p), moe_groups=moe_groups)
                 x = x + h
-        return x, new_cache
+        return x, (new_cache, new_pages)
 
     blocks = _blocks(params, cfg)
     layer_caches = {k: v for k, v in cache.items() if k != "len"}
-    x, new_caches = jax.lax.scan(layer_body, x, (blocks, layer_caches))
+    x, (new_caches, new_pages) = jax.lax.scan(
+        layer_body, x, (blocks, layer_caches, pages_in)
+    )
     x = _norm(cfg, params["final_norm"], x)
     logits = (x @ params["lm_head"]["kernel"].astype(x.dtype)).astype(jnp.float32)
     if cfg.final_softcap is not None:
         logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
     new_caches["len"] = cache["len"] + 1
-    return logits, new_caches
+    if pages is None:
+        return logits, new_caches
+    return logits, new_caches, new_pages
 
 
 def prefill_step(cfg: ModelConfig, params: PyTree, batch: dict,
@@ -513,7 +587,11 @@ def prefill_step(cfg: ModelConfig, params: PyTree, batch: dict,
                 q = apply_rope(q, positions, cfg.rope_theta)
                 k = apply_rope(k, positions, cfg.rope_theta)
                 window = cfg.window if kind == "attn_local" else None
-                impl = "flash" if s > 1024 and s % cfg.flash_q_block == 0 else "dense"
+                # honor cfg.attn_impl exactly like _attn_sublayer: "auto"
+                # picks by length, a pinned "dense"/"flash" is obeyed
+                impl = cfg.attn_impl
+                if impl == "auto":
+                    impl = "flash" if s > 1024 and s % cfg.flash_q_block == 0 else "dense"
                 if impl == "flash":
                     h = attn_lib.flash_attention(
                         q, k, v, True, window, cfg.attn_softcap,
@@ -546,6 +624,142 @@ def prefill_step(cfg: ModelConfig, params: PyTree, batch: dict,
         logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
     caches["len"] = jnp.full((), s, jnp.int32)
     return logits, caches
+
+
+def prefill_chunk(cfg: ModelConfig, params: PyTree, row: PyTree, pages: PyTree,
+                  batch: dict, offset: jax.Array, prior_tab: jax.Array,
+                  write_tab: jax.Array, moe_groups: int = 1):
+    """One chunk of a paged, resumable prefill for a SINGLE request.
+
+    The prompt is fed in block-aligned chunks so a long prompt never stalls
+    the running decode batch: the engine interleaves one chunk per request
+    per boundary.  Each chunk attends to (a) the prior context gathered from
+    the request's already-written pool blocks (full-attention positions) or
+    its windowed ring / SSM state (carried in ``row``), and (b) its own keys
+    — causally, at absolute positions ``offset + arange(C)``.
+
+    Args:
+      row: per-request carry — ``{"len": (1,)}`` plus windowed-ring and SSM
+        entries (``init_cache(cfg, 1, max_seq, skip=paged_positions(cfg))``
+        shapes); full-attention positions have NO row entry, their KV goes
+        straight to ``pages`` at ``write_tab``.
+      pages: the block pool (``init_pages`` layout).
+      batch: ``{"tokens": (1, C)}`` — C a multiple of the block size.
+      offset: () int32, this chunk's first absolute position (block-aligned).
+      prior_tab: (nbp,) int32 prior prompt blocks in logical order, padded
+        with sentinel 0 up to a pow2 length (so the compile key is
+        ``(C, nbp, rung)``, not per-offset); entries past ``offset`` tokens
+        are masked on read.
+      write_tab: (C // block,) int32 destination blocks for this chunk.
+
+    Returns (last-position logits (1,1,V), new row, new pages).
+    """
+    cdt = _cdtype(cfg)
+    x = _embed_input(cfg, params, batch)
+    _, c, _ = x.shape
+    hd = cfg.resolved_head_dim
+    positions = offset + jnp.arange(c)[None, :]  # (1, C)
+    q_pos = offset + jnp.arange(c)
+    paged = set(paged_positions(cfg))
+
+    def layer_body(x, scanned):
+        layer, lrow, lpages = scanned
+        new_row, new_pages = {}, {}
+        for p in range(cfg.period):
+            kind = cfg.pattern[p]
+            blk = layer[f"pos{p}"]
+            h = _norm(cfg, blk["norm"], x)
+            if kind == "mamba":
+                # the internal chunked scan needs an even split; fall back to
+                # one chunk when the prefill chunk doesn't divide
+                sc = min(cfg.ssm_chunk, c)
+                if c % sc:
+                    sc = c
+                h_out, state = ssm_lib.mamba_apply(
+                    blk["mamba"], h, d_state=cfg.ssm_state, dt_rank=cfg.dt_rank,
+                    chunk=sc, return_state=True, state=lrow[f"pos{p}"],
+                )
+                new_row[f"pos{p}"] = {
+                    "h": state["h"],
+                    "conv": state["conv"].astype(cdt),
+                }
+                h = h_out
+            elif p in paged:  # full attention: prior context from the pool
+                ap = blk["attn"]
+                q = dense(ap["q"], h).reshape(1, c, cfg.num_heads, hd)
+                k = dense(ap["k"], h).reshape(1, c, cfg.num_kv_heads, hd)
+                v = dense(ap["v"], h).reshape(1, c, cfg.num_kv_heads, hd)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                pk, pv = lpages[f"pos{p}"]["k"], lpages[f"pos{p}"]["v"]
+                blk_sz = pk.shape[1]
+                np_prior = prior_tab.shape[0]
+                prior = np_prior * blk_sz
+                gk = jnp.take(pk, prior_tab, axis=0).reshape(1, prior, cfg.num_kv_heads, hd)
+                gv = jnp.take(pv, prior_tab, axis=0).reshape(1, prior, cfg.num_kv_heads, hd)
+                k_pos = jnp.concatenate([jnp.arange(prior), q_pos])
+                k_valid = jnp.concatenate(
+                    [jnp.arange(prior) < offset, jnp.ones((c,), bool)]
+                )
+                h = attn_lib.chunk_attention(
+                    q, jnp.concatenate([gk, k], axis=1),
+                    jnp.concatenate([gv, v], axis=1),
+                    q_pos, k_pos, k_valid, window=None, softcap=cfg.attn_softcap,
+                )
+                h = dense(ap["o"], h.reshape(1, c, cfg.num_heads * hd))
+                pk = pk.at[write_tab].set(k[0].reshape(-1, blk_sz, cfg.num_kv_heads, hd))
+                pv = pv.at[write_tab].set(v[0].reshape(-1, blk_sz, cfg.num_kv_heads, hd))
+                new_pages[f"pos{p}"] = {"k": pk, "v": pv}
+            elif kind == "attn_local":  # prior context from the windowed ring
+                ap = blk["attn"]
+                q = dense(ap["q"], h).reshape(1, c, cfg.num_heads, hd)
+                k = dense(ap["k"], h).reshape(1, c, cfg.num_kv_heads, hd)
+                v = dense(ap["v"], h).reshape(1, c, cfg.num_kv_heads, hd)
+                q = apply_rope(q, positions, cfg.rope_theta)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                ring_k, ring_v = lrow[f"pos{p}"]["k"], lrow[f"pos{p}"]["v"]
+                s_c = ring_k.shape[1]
+                prior_pos = offset - s_c + jnp.arange(s_c)  # chronological
+                idx = jnp.mod(prior_pos, s_c)
+                gk = jnp.take(ring_k, idx, axis=1)
+                gv = jnp.take(ring_v, idx, axis=1)
+                k_pos = jnp.concatenate([prior_pos, q_pos])
+                k_valid = jnp.concatenate([prior_pos >= 0, jnp.ones((c,), bool)])
+                h = attn_lib.chunk_attention(
+                    q, jnp.concatenate([gk, k], axis=1),
+                    jnp.concatenate([gv, v], axis=1),
+                    q_pos, k_pos, k_valid, window=cfg.window,
+                    softcap=cfg.attn_softcap,
+                )
+                h = dense(ap["o"], h.reshape(1, c, cfg.num_heads * hd))
+                w = min(c, s_c)  # the chunk tail that survives into the ring
+                widx = jnp.mod(offset + c - w + jnp.arange(w), s_c)
+                ring_k = ring_k.at[:, widx].set(k[:, c - w:])
+                ring_v = ring_v.at[:, widx].set(v[:, c - w:])
+                new_row[f"pos{p}"] = {"k": ring_k, "v": ring_v}
+            else:
+                raise ValueError(
+                    f"pattern position {p} ({kind!r}) has no paged-prefill path"
+                )
+            x = x + h
+            if "ffn" in blk:
+                h = _norm(cfg, blk["ffn_norm"], x)
+                h, _ = _ffn_sublayer(cfg, blk["ffn"], x=h, kind=cfg.ffn_kind(p), moe_groups=moe_groups)
+                x = x + h
+        return x, (new_row, new_pages)
+
+    blocks = _blocks(params, cfg)
+    row_layers = {k: v for k, v in row.items() if k != "len"}
+    x, (new_row, new_pages) = jax.lax.scan(
+        layer_body, x, (blocks, row_layers, pages)
+    )
+    x = _norm(cfg, params["final_norm"], x)
+    last = x[:, -1:, :]
+    logits = (last @ params["lm_head"]["kernel"].astype(last.dtype)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    new_row["len"] = row["len"] + c
+    return logits, new_row, new_pages
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,18 @@
-"""repro.serve — elastic continuous-batching serving.
+"""repro.serve — elastic continuous-batching serving over a paged KV cache.
 
 ``ServeEngine`` (engine.py) mirrors the train stack: a bucketed
-``(bucket, rung)`` compile cache over jitted prefill/decode, a
+``(bucket, rung)`` compile cache over jitted chunked-prefill/decode, a
 ``Scheduler`` (scheduler.py) doing true continuous batching (admission
 queue, slot refill at step boundaries, per-slot EOS/max-token retirement),
-and an optional ``MeshLadder`` that co-adapts the device footprint with the
-live decode batch — reshard via ``elastic.reshard.place`` for params and
-``dist.sharding.cache_pspecs`` for the KV/SSM cache.  ``ServeStats``
-mirrors ``EngineStats``.
+a ``BlockPool`` (blocks.py) paging full-attention KV into refcounted
+fixed-size blocks with chain-hashed copy-on-write prefix sharing, and an
+optional ``MeshLadder`` that co-adapts the device footprint with the live
+decode batch — reshard via ``elastic.reshard.place`` for params and
+``dist.sharding.cache_pspecs`` for the KV/SSM cache and the block pool.
+``ServeStats`` mirrors ``EngineStats``.
 """
 
+from repro.serve.blocks import BlockPool, PoolExhausted, chain_keys
 from repro.serve.engine import ServeEngine, ServeStats, padded_prompt_len
 from repro.serve.scheduler import Admission, Request, Result, Scheduler
 
@@ -20,5 +23,8 @@ __all__ = [
     "Admission",
     "Request",
     "Result",
+    "BlockPool",
+    "PoolExhausted",
+    "chain_keys",
     "padded_prompt_len",
 ]

@@ -1,44 +1,60 @@
-"""ServeEngine — elastic continuous-batching prefill/decode.
+"""ServeEngine — elastic continuous-batching prefill/decode over a paged KV
+block pool.
 
 The serving mirror of the train stack's single path: one engine, a bucketed
 ``(bucket, rung)`` compile cache, and a ``MeshLadder`` that lets the live
 request load drive the device footprint — DiveBatch's rule ("run as wide as
-the batch justifies, no wider") applied to inference, where the decode batch
-ebbs with arrivals and drains exactly like the train batch ebbs with the
-diversity signal.
+the batch justifies, no wider") applied to inference.  Since PR 6 the cache
+side applies the same rule to MEMORY: KV for full-attention layers lives in a
+vLLM-style block pool, so the footprint tracks resident tokens instead of
+``max_slots * max_seq``.
 
 Pieces:
 
   * ``Scheduler`` (serve/scheduler.py) — true continuous batching: an
     admission queue, slot free/refill at every step boundary, per-slot
-    EOS/max-token retirement.  The old chunked ``generate`` held the whole
-    chunk hostage to its longest request and kept decoding finished slots.
-  * per-slot decode — ``models/transformer.decode_step`` accepts a ``(B,)``
-    per-slot position vector (``cache["len"]``): every slot lives on its own
-    timeline, so admissions/retirements never synchronise the batch.  A
-    request is prefilled alone at a pow2-padded prompt length and its cache
-    rows are inserted into the batched cache, which makes each request's
-    output a function of the request alone — token-identical across slot
-    buckets, scheduling orders, mesh rungs, and live rung transitions (the
-    rung-golden tests assert exactly this).
-  * compile cache — decode programs are AOT-compiled per ``(bucket, rung)``
-    where ``bucket`` is the pow2 slot capacity (``core/batch_policy.bucket``
-    lattice, inactive slots masked via the per-row validity mask); prefill
-    programs per (padded prompt length, rung); insert/gather helpers per
-    shape.  Donation keeps one batched cache live.
-  * elastic rungs — ``ServeEngine(elastic=MeshLadder(...))`` picks the rung
-    from the live slot count; a rung transition re-places the params via
-    ``elastic.reshard.place`` and the KV/SSM cache via
-    ``dist.sharding.cache_pspecs``.  Without a ladder the engine runs on the
-    ambient ``dist.use_plan`` plan (the fixed-full-mesh baseline) or single
-    device.
-  * ``ServeStats`` — compiles, bucket/rung hits, reshards, resizes, and a
-    windowed tokens/s (``adapt.signals.ThroughputWindow``), mirroring
-    ``EngineStats`` for benchmarks (benchmarks/bench_serve.py) and tests.
+    EOS/max-token retirement.  Admission is gated by the block pool's
+    reservation check (worst-case blocks are promised up front, so a live
+    request can never strand mid-decode on an exhausted pool).
+  * ``BlockPool`` (serve/blocks.py) — host accounting for the device pool:
+    free list, refcounts, reservations, chain-hashed prefix registry with
+    copy-on-write, LRU-evictable cached prefixes.  The device side is
+    ``models/transformer.init_pages``: per full-attention pattern position, a
+    flat ``(repeats, num_blocks, block, kv, hd)`` pool sharded by
+    ``dist.sharding.cache_pspecs`` (block axis over dp, kv heads over tp).
+    Block 0 is the sentinel: inactive decode lanes write there, reads are
+    masked by per-slot validity.  Windowed rings and SSM state stay in the
+    dense per-slot cache — they are O(1) per slot already.
+  * per-request block tables — the engine maps each request's logical
+    positions to pool blocks (host ``np`` tables rebuilt per step, sentinel
+    elsewhere), so ``decode_step`` reads context through a table gather and
+    writes the new token at ``table[pos // block]``.  Tables are keyed by
+    request, not slot: a resize compacts cache ROWS, the tables just follow
+    the request.
+  * chunked prefill — prompts stream through ``prefill_chunk`` in
+    block-aligned chunks, compiled per ``(chunk, prior-block bucket, rung)``;
+    every pending prompt advances one chunk per boundary, interleaved with
+    decode, so a long prompt never stalls the running batch.  With
+    ``prefill_chunk=0`` (default) a prompt is one chunk — exactly the old
+    whole-prompt schedule, which the rung-golden lane pins token-for-token.
+  * prefix sharing — padded prompts chain-hash per block; a request whose
+    padded prompt matches a registered chain adopts the blocks (refcounted)
+    instead of recomputing them.  A FULL-prompt match replays the cached
+    end-of-prompt row state + logits and skips prefill entirely (the
+    N-thousand-user shared-system-prompt case costs one prefill); a partial
+    match (pure full-attention configs, where the pool holds all the state)
+    prefills only the tail chunks.
+  * compile cache — decode programs AOT-compiled per ``(bucket, rung)`` with
+    the pool shape fixed for the engine lifetime, so paging adds ZERO compile
+    keys: ``compiles == len(set(zip(buckets, rungs)))`` still holds.
+  * ``ServeStats`` — plus pool metrics: ``peak_blocks`` (peak live blocks —
+    the resident-token footprint), ``prefill_chunks``, ``shared_prefill_hits``,
+    ``cow_copies``.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 import warnings
@@ -55,6 +71,7 @@ from repro.dist.plan import current_plan
 from repro.dist.sharding import cache_pspecs, shardings_of
 from repro.elastic import MeshLadder, place
 from repro.models import transformer as tf
+from repro.serve.blocks import BlockPool, chain_keys
 from repro.serve.scheduler import Admission, Request, Result, Scheduler
 
 PyTree = Any
@@ -69,41 +86,11 @@ def padded_prompt_len(n: int, granule: int) -> int:
 
     Prompts are LEFT-padded to their own bucket independently of what they
     are batched with, so a request's padding — and therefore its tokens —
-    never depends on its co-scheduled neighbours."""
+    never depends on its co-scheduled neighbours.  Prefix sharing hashes the
+    PADDED stream for the same reason: identical padded streams mean
+    identical absolute positions, so shared blocks are bit-compatible."""
     return bucket(max(int(n), 1), max(int(granule), 1), "pow2",
                   m_min=max(int(n), 1))
-
-
-def _slot_cache(cfg: ModelConfig, cache: PyTree, max_seq: int, plen: int) -> PyTree:
-    """Convert a batch-1 prefill cache (geometry of a ``plen`` context) to
-    one row of the batched decode cache (geometry of a ``max_seq`` context).
-
-    Full-attention layers pad with (validity-masked) zeros to the decode
-    length.  Windowed layers are ring buffers indexed by ``position % window``
-    in decode, while prefill emits the newest ``window`` entries in
-    chronological order — the roll rotates them into ring order so later
-    decode writes evict the genuinely oldest position."""
-    out = {"len": jnp.reshape(cache["len"], (1,)).astype(jnp.int32)}
-    for p in range(cfg.period):
-        if cfg.pattern[p] == "mamba":
-            out[f"pos{p}"] = cache[f"pos{p}"]  # O(1) state: row geometry already
-            continue
-        s_c = tf._cache_len_for(cfg, p, max_seq)
-
-        def fit(x):
-            length = x.shape[2]
-            if length > s_c:
-                x = x[:, :, length - s_c:]
-                length = s_c
-            if length == s_c:
-                return jnp.roll(x, plen % s_c, axis=2)
-            pad = [(0, 0)] * x.ndim
-            pad[2] = (0, s_c - length)
-            return jnp.pad(x, pad)
-
-        lc = cache[f"pos{p}"]
-        out[f"pos{p}"] = {"k": fit(lc["k"]), "v": fit(lc["v"])}
-    return out
 
 
 def _insert_row(cache: PyTree, row: PyTree, j) -> PyTree:
@@ -127,6 +114,39 @@ def _gather_rows(cache: PyTree, idx) -> PyTree:
     )
 
 
+def _copy_block(pages: PyTree, src, dst) -> PyTree:
+    """Device side of copy-on-write: duplicate pool block ``src`` into
+    ``dst`` across every paged position (block axis is 1, after repeats)."""
+    return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]), pages)
+
+
+@dataclasses.dataclass
+class _BlockState:
+    """Host bookkeeping for one request's slice of the pool."""
+
+    tokens: np.ndarray  # the PADDED prompt (plen,)
+    plen: int
+    budget: int
+    nb_prompt: int  # prompt blocks (plen // block_size)
+    total_need: int  # worst-case blocks (prompt + decode budget)
+    keys: list  # chain keys of the padded prompt ([] with sharing off)
+    table: list[int] = dataclasses.field(default_factory=list)
+    reserved: int = 0  # outstanding pool credits
+    shared: int = 0  # blocks adopted from the prefix registry
+    pos: int = 0  # tokens resident on device (mirror of cache["len"])
+    ent: dict | None = None  # full-prompt cache hit staged by the gate
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """A prompt mid-load: one chunk advances per boundary."""
+
+    rid: int
+    off: int  # next chunk's first position (block-aligned)
+    row: PyTree  # carried per-request state (len, windowed rings, SSM)
+    stepped: bool = False
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Observable serving behaviour (mirrors ``train.engine.EngineStats``).
@@ -134,13 +154,20 @@ class ServeStats:
     ``compiles`` counts decode-step compilations — one per distinct
     ``(bucket, rung)`` pair, so ``compiles == len(set(zip(buckets,
     rungs)))``; ``bucket_hits``/``bucket_misses`` count decode cache
-    lookups (one per decode step).  ``prefill_compiles`` counts per-(padded
-    prompt length, rung) prefill programs, ``aux_compiles`` the
-    insert/gather helpers.  ``slot_steps`` is the total decoded lanes
-    (capacity summed over steps — the waste metric the old chunked
-    ``generate`` lost to its longest request); ``tokens`` counts tokens
-    actually delivered to requests.  ``tokens_per_sec`` is the windowed rate
-    (``adapt.signals.ThroughputWindow``), not a run-global average.
+    lookups (one per decode step).  ``prefill_compiles`` counts per-(chunk,
+    prior-block bucket, rung) prefill programs, ``aux_compiles`` the
+    insert/gather/sample helpers.  ``slot_steps`` is the total decoded lanes
+    (capacity summed over steps); ``tokens`` counts tokens actually delivered
+    to requests.  ``prefills`` counts requests whose prompt became resident
+    (including shared-prefix instant hits); ``prefill_chunks`` counts chunk
+    programs actually executed — a fully shared prompt runs zero;
+    ``shared_prefill_hits`` counts those instant admissions and
+    ``shared_blocks`` the pool blocks adopted instead of recomputed.
+    ``pool_blocks``/``peak_blocks`` give the pool capacity and the peak
+    LIVE (refcounted) block count — the resident-token footprint that
+    replaced the dense ``max_slots * max_seq`` preallocation.
+    ``tokens_per_sec`` is the windowed rate (``adapt.signals
+    .ThroughputWindow``), not a run-global average.
     """
 
     compiles: int = 0
@@ -152,6 +179,13 @@ class ServeStats:
     slot_steps: int = 0
     tokens: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0
+    shared_prefill_hits: int = 0
+    shared_blocks: int = 0
+    cow_copies: int = 0
+    pool_blocks: int = 0
+    peak_blocks: int = 0
+    block_size: int = 0
     retired: int = 0
     reshards: int = 0
     resizes: int = 0
@@ -167,7 +201,7 @@ class ServeStats:
 
 
 class ServeEngine:
-    """Continuous-batching serving over the model zoo.
+    """Continuous-batching serving over the model zoo, paged KV cache.
 
     ``submit``/``step`` is the streaming interface (the benches drive
     arrival traces through it); ``generate(requests)`` is the batch
@@ -189,6 +223,10 @@ class ServeEngine:
         elastic: MeshLadder | None = None,
         donate: bool = True,
         shrink_patience: int = 2,
+        block_size: int | None = None,
+        pool_blocks: int | None = None,
+        prefill_chunk: int = 0,
+        prefix_sharing: bool = True,
     ):
         if sampler not in SAMPLERS:
             raise ValueError(f"sampler must be one of {SAMPLERS}, got {sampler!r}")
@@ -200,6 +238,19 @@ class ServeEngine:
         self.seed = int(seed)
         self.prompt_granule = int(prompt_granule)
         self.donate = bool(donate)
+        self.prefix_sharing = bool(prefix_sharing)
+        self.block_size = int(block_size) if block_size else self.prompt_granule
+        if self.prompt_granule % self.block_size:
+            raise ValueError(
+                f"prompt_granule {self.prompt_granule} must be a multiple of "
+                f"block_size {self.block_size} (prompts pad to whole blocks)"
+            )
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk and self.prefill_chunk % self.block_size:
+            raise ValueError(
+                f"prefill_chunk {self.prefill_chunk} must be a multiple of "
+                f"block_size {self.block_size}"
+            )
         plan = current_plan()
         if elastic is not None and plan is not None:
             raise ValueError(
@@ -223,7 +274,33 @@ class ServeEngine:
         self._shrink_streak = 0
         self._sample = self._sampler_fn()
         self._exes: dict[tuple, Any] = {}
-        self.stats = ServeStats(donate=self.donate)
+        # -- the paged pool -------------------------------------------------
+        # Table capacity: the satellite-3 budget fix lets logical positions
+        # run past max_seq by the prompt's padding slack (plen - raw), which
+        # is < max(granule, max_seq/2) on the pow2 lattice.
+        span = self.max_seq + max(self.prompt_granule, self.max_seq // 2)
+        self._n_max = -(-span // self.block_size)
+        self._paged = tf.paged_positions(self.cfg)
+        if pool_blocks is None:
+            # pow2 default: worst-case credits for every slot + the sentinel
+            # (pow2 also keeps the dp sharding of the block axis even)
+            pool_blocks = padded_prompt_len(1 + self.max_slots * self._n_max, 1)
+        self.pool = BlockPool(int(pool_blocks), self.block_size)
+        self._pages = self._place_cache(
+            tf.init_pages(self.cfg, int(pool_blocks), self.block_size)
+        )
+        # a partial chain match only covers full-attention state (it lives in
+        # the pool); configs with rings/SSM share only on full-prompt hits
+        self._row_trivial = len(self._paged) == self.cfg.period
+        self._req_blocks: dict[int, _BlockState] = {}
+        self._jobs: list[_PrefillJob] = []
+        self._prompt_cache: collections.OrderedDict = collections.OrderedDict()
+        self._prompt_cache_cap = 256
+        self.stats = ServeStats(
+            donate=self.donate,
+            pool_blocks=self.pool.num_blocks,
+            block_size=self.block_size,
+        )
         self._thru = ThroughputWindow()
 
     # -- plumbing ------------------------------------------------------------
@@ -270,19 +347,25 @@ class ServeEngine:
     def _decode_fn(self):
         cfg, sample = self.cfg, self._sample
 
-        def fn(params, cache, toks, rids):
-            logits, cache = tf.decode_step(cfg, params, cache, toks)
-            return sample(logits, rids, cache["len"]), cache
+        def fn(params, cache, pages, tables, toks, rids):
+            logits, cache, pages = tf.decode_step(
+                cfg, params, cache, toks, pages=pages, tables=tables
+            )
+            return sample(logits, rids, cache["len"]), cache, pages
 
         return fn
 
-    def _prefill_fn(self, plen: int):
-        cfg, sample, max_seq = self.cfg, self._sample, self.max_seq
+    def _chunk_fn(self):
+        cfg, sample = self.cfg, self._sample
 
-        def fn(params, toks, rid):
-            logits, cache = tf.prefill_step(cfg, params, {"tokens": toks})
-            row = _slot_cache(cfg, cache, max_seq, plen)
-            return sample(logits, rid[None], row["len"]), row
+        def fn(params, pages, row, toks, rid, ptab, wtab, off):
+            logits, row, pages = tf.prefill_chunk(
+                cfg, params, row, pages, {"tokens": toks}, off, ptab, wtab
+            )
+            # only the FINAL chunk's token is consumed (row["len"] == plen
+            # there); intermediate chunk tokens are discarded by the caller
+            tok = sample(logits, rid[None], row["len"])
+            return tok, logits, row, pages
 
         return fn
 
@@ -294,7 +377,8 @@ class ServeEngine:
 
     def _place_cache(self, cache: PyTree) -> PyTree:
         """KV/SSM cache onto the live plan via ``dist.sharding.cache_pspecs``
-        (batch rows over dp, kv-heads over tp; plan-free = leave as is)."""
+        (batch rows / pool blocks over dp, kv-heads over tp; plan-free =
+        leave as is)."""
         sh = self._cache_shardings(cache)
         return cache if sh is None else jax.device_put(cache, sh)
 
@@ -341,8 +425,9 @@ class ServeEngine:
 
     # -- elastic -------------------------------------------------------------
     def _ensure_rung(self) -> None:
-        """Move params + cache onto the ladder rung for the live slot count
-        (no-op off-ladder or on an unchanged rung)."""
+        """Move params + cache + pool + in-flight prefill state onto the
+        ladder rung for the live slot count (no-op off-ladder or on an
+        unchanged rung)."""
         if self._elastic is None:
             return
         rung = self._elastic.rung_for_batch(max(self._bucket, 1))
@@ -352,11 +437,17 @@ class ServeEngine:
         self.params = place(self.params, rung.plan)
         if self._cache is not None:
             self._cache = self._place_cache(self._cache)
+        self._pages = self._place_cache(self._pages)
+        for job in self._jobs:
+            job.row = self._place_cache(job.row)
+        for ent in self._prompt_cache.values():
+            ent["row"] = self._place_cache(ent["row"])
         self.stats.reshards += 1
 
     def _resize(self, target: int) -> None:
         """Track the scheduler's pow2 slot capacity: grow/shrink the batched
-        cache (compacting live rows via the scheduler's gather map), then
+        per-slot cache (compacting live rows via the scheduler's gather map
+        — the POOL never resizes, tables just follow their requests), then
         follow with the rung transition."""
         if target == self._bucket:
             return
@@ -364,12 +455,12 @@ class ServeEngine:
         old = self._bucket
         self._bucket = target
         if target == 0:
-            self._cache = None
+            self._cache = None  # the pool (and its cached prefixes) persists
             return
         self.stats.resizes += 1
         if self._cache is None:
             self._ensure_rung()
-            cache = tf.init_cache(self.cfg, target, self.max_seq)
+            cache = tf.init_cache(self.cfg, target, self.max_seq, skip=self._paged)
             cache["len"] = jnp.zeros((target,), jnp.int32)  # per-slot timeline
             self._cache = self._place_cache(cache)
             return
@@ -394,58 +485,274 @@ class ServeEngine:
                 f"prompt of {len(prompt)} tokens pads to {plen} > max_seq "
                 f"{self.max_seq}"
             )
-        # token 1 comes from prefill (no cache write); token k >= 2 writes
-        # position plen + k - 2, which must stay inside the cache
-        budget = min(int(request.max_new_tokens), self.max_seq - plen + 1)
-        return self.sched.submit(request, budget=budget)
-
-    def _prefill_into(self, adm: Admission) -> None:
-        prompt = np.asarray(adm.request.prompt, np.int32).reshape(-1)
-        plen = padded_prompt_len(len(prompt), self.prompt_granule)
-        toks = np.zeros((1, plen), np.int32)
+        # headroom from the TRUE prompt length: with block tables the pad
+        # columns cost table entries, not budget — a request near max_seq
+        # keeps its full max_new_tokens (positions may pass max_seq by the
+        # padding slack; _n_max sizes the tables for exactly that)
+        budget = min(int(request.max_new_tokens), self.max_seq - len(prompt) + 1)
+        padded = np.zeros(plen, np.int32)
         if len(prompt):
-            toks[0, plen - len(prompt):] = prompt  # left-pad
-        rid = np.asarray(adm.rid, np.int32)
-        fn = self._prefill_fn(plen)
-        exe = self._exe(
-            ("prefill", plen, self._rung_token), lambda: fn,
-            (self.params, toks, rid),
-            out_pin=lambda: (None, self._cache_shardings(
-                jax.eval_shape(fn, self.params, toks, rid)[1]
-            )),
-            kind="prefill",
+            padded[plen - len(prompt):] = prompt  # left-pad
+        nb_prompt = plen // self.block_size
+        total_need = nb_prompt + -(-(budget - 1) // self.block_size)
+        if total_need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request needs {total_need} pool blocks but the pool holds "
+                f"{self.pool.num_blocks - 1}; raise pool_blocks"
+            )
+        rid = self.sched.submit(request, budget=budget)
+        self._req_blocks[rid] = _BlockState(
+            tokens=padded, plen=plen, budget=budget, nb_prompt=nb_prompt,
+            total_need=total_need,
+            keys=chain_keys(padded, self.block_size) if self.prefix_sharing else [],
         )
-        tok, row = exe(self.params, toks, rid)
-        j = np.asarray(adm.slot, np.int32)
+        return rid
+
+    def _shared_prefix(self, bs: _BlockState):
+        """(adoptable prefix block ids, full-prompt cache entry or None).
+
+        A full-chain match alone cannot emit token 1 (no logits cached in the
+        pool), so it is only an instant admission when the prompt cache still
+        holds the end-of-prompt row + logits AND the registry still maps the
+        whole chain to the entry's blocks; otherwise fall back to a partial
+        match capped at nb_prompt - 1 — valid only for pure full-attention
+        configs (ring/SSM state is not in the pool)."""
+        if not self.prefix_sharing or not bs.keys:
+            return [], None
+        ent = self._prompt_cache.get(bs.keys[-1])
+        if ent is not None:
+            ids = self.pool.match(bs.keys)
+            if len(ids) == bs.nb_prompt and ids == ent["ids"]:
+                self._prompt_cache.move_to_end(bs.keys[-1])
+                return ids, ent
+            del self._prompt_cache[bs.keys[-1]]  # stale: blocks evicted
+        if not self._row_trivial:
+            return [], None
+        return self.pool.match(bs.keys[:bs.nb_prompt - 1]), None
+
+    def _gate(self, rid: int, request: Request) -> bool:
+        """Admission gate AND claim: can the pool cover this request's worst
+        case?  A passing gate immediately adopts the shared prefix, reserves
+        the rest, and allocates the prompt blocks — the claim must land
+        before the scheduler gates the NEXT queue head in the same pass, or
+        two admissions would both be judged against the unclaimed pool.
+        (``Scheduler.admit`` guarantees a passing gate IS admitted, so a
+        claim is never orphaned.)"""
+        bs = self._req_blocks[rid]
+        ids, ent = self._shared_prefix(bs)
+        if not self.pool.feasible(ids, bs.total_need):
+            return False
+        for b in ids:
+            self.pool.retain(b)
+        self.pool.reserve(bs.total_need - len(ids))
+        bs.reserved = bs.total_need - len(ids)
+        bs.shared = len(ids)
+        bs.table = list(ids)
+        while len(bs.table) < bs.nb_prompt:
+            bs.table.append(self.pool.alloc(reserved=True))
+            bs.reserved -= 1
+        bs.ent = ent
+        self.stats.shared_blocks += len(ids)
+        self.stats.peak_blocks = self.pool.peak_live
+        return True
+
+    def _begin(self, adm: Admission) -> None:
+        """Start an admitted request (blocks were claimed by ``_gate``):
+        either replay a full-prompt cache hit or start a chunked prefill
+        job."""
+        bs = self._req_blocks[adm.rid]
+        ent, bs.ent = bs.ent, None
+        if ent is not None:
+            self._admit_shared(adm, bs, ent)
+        else:
+            self._jobs.append(_PrefillJob(
+                rid=adm.rid, off=bs.shared * self.block_size,
+                row=self._fresh_row(bs.shared * self.block_size),
+            ))
+
+    def _fresh_row(self, off: int) -> PyTree:
+        """Zeroed per-request prefill carry, starting at position ``off``
+        (> 0 when a shared prefix was adopted)."""
+        row = tf.init_cache(self.cfg, 1, self.max_seq, skip=self._paged)
+        row["len"] = jnp.full((1,), off, jnp.int32)
+        return self._place_cache(row)
+
+    def _admit_shared(self, adm: Admission, bs: _BlockState, ent: dict) -> None:
+        """Full-prompt cache hit: the prompt is already resident — replay the
+        cached end-of-prompt logits through the sampler (keyed by THIS
+        request's rid, so categorical streams stay per-request) and insert
+        the cached row.  Zero prefill compute."""
+        rid = np.asarray(adm.rid, np.int32)
+        pos = np.full((1,), bs.plen, np.int32)
+        exe = self._exe(
+            ("sample", self._rung_token), lambda: self._sample,
+            (ent["logits"], rid[None], pos),
+        )
+        tok = exe(ent["logits"], rid[None], pos)
+        self._insert(adm.slot, ent["row"])
+        bs.pos = bs.plen
+        self.stats.prefills += 1
+        self.stats.shared_prefill_hits += 1
+        self._count_token(1)
+        done = self.sched.record(adm.slot, int(np.asarray(tok)[0]))
+        if done:
+            self._release(adm.rid)
+
+    def _insert(self, slot: int, row: PyTree) -> None:
+        j = np.asarray(slot, np.int32)
         iexe = self._exe(
             ("insert", self._bucket, self._rung_token), lambda: _insert_row,
             (self._cache, row, j), donate=(0,),
             out_pin=lambda: self._cache_shardings(self._cache),
         )
         self._cache = iexe(self._cache, row, j)
-        self.stats.prefills += 1
-        self.stats.tokens += 1
-        self._thru.add(1.0)
-        rate = self._thru.rate()
-        if rate is not None:  # prefill tokens count toward the live rate too
-            self.stats.tokens_per_sec = rate
-        self.sched.record(adm.slot, int(np.asarray(tok)[0]))
 
-    def _admit(self) -> None:
+    def _count_token(self, n: int) -> None:
+        self.stats.tokens += n
+        self._thru.add(float(n))
+        rate = self._thru.rate()
+        if rate is not None:
+            self.stats.tokens_per_sec = rate
+
+    # -- chunked prefill -----------------------------------------------------
+    def _run_chunk(self, job: _PrefillJob) -> None:
+        """Advance one prompt by one block-aligned chunk.  The prior-context
+        table is padded to a pow2 block count so the compile key is
+        ``(chunk, prior bucket, rung)`` — O(log max_seq) programs, not one
+        per offset."""
+        bs = self._req_blocks[job.rid]
+        c = bs.plen - job.off
+        if self.prefill_chunk:
+            c = min(c, self.prefill_chunk)
+        toks = bs.tokens[None, job.off:job.off + c]
+        nbp_real = job.off // self.block_size
+        nbp = padded_prompt_len(nbp_real, 1) if nbp_real else 0
+        ptab = np.zeros((nbp,), np.int32)
+        ptab[:nbp_real] = bs.table[:nbp_real]
+        wtab = np.asarray(
+            bs.table[nbp_real:(job.off + c) // self.block_size], np.int32
+        )
+        rid = np.asarray(job.rid, np.int32)
+        off = np.int32(job.off)
+        fn = self._chunk_fn()
+        args = (self.params, self._pages, job.row, toks, rid, ptab, wtab, off)
+        exe = self._exe(
+            ("pfchunk", c, nbp, self._rung_token), lambda: fn, args,
+            donate=(1, 2),
+            out_pin=lambda: (
+                None, None,
+                self._cache_shardings(jax.eval_shape(fn, *args)[2]),
+                self._cache_shardings(self._pages),
+            ),
+            kind="prefill",
+        )
+        tok, logits, job.row, self._pages = exe(*args)
+        job.off += c
+        self.stats.prefill_chunks += 1
+        if job.off == bs.plen:
+            self._finish_job(job, tok, logits)
+
+    def _finish_job(self, job: _PrefillJob, tok, logits) -> None:
+        """Final chunk done: register the prompt chain, cache the
+        end-of-prompt state for future full-prompt hits, insert the row, and
+        record token 1."""
+        bs = self._req_blocks[job.rid]
+        self._jobs.remove(job)
+        bs.pos = bs.plen
+        if self.prefix_sharing and bs.keys:
+            for key, bid in zip(bs.keys, bs.table[:bs.nb_prompt]):
+                self.pool.register(key, bid)  # first writer wins
+            ids = self.pool.match(bs.keys)
+            if len(ids) == bs.nb_prompt:
+                self._prompt_cache[bs.keys[-1]] = {
+                    "ids": ids,
+                    "row": job.row,
+                    # host copy: rung-independent, tiny (1 x vocab)
+                    "logits": np.asarray(logits),
+                }
+                while len(self._prompt_cache) > self._prompt_cache_cap:
+                    self._prompt_cache.popitem(last=False)
+        slot = self.sched.slot_of(job.rid)
+        self._insert(slot, job.row)
+        self.stats.prefills += 1
+        self._count_token(1)
+        done = self.sched.record(slot, int(np.asarray(tok)[0]))
+        if done:
+            self._release(job.rid)
+
+    def _prefill_work(self) -> None:
+        """Admissions + one chunk per pending prompt, repeated while instant
+        retirements (EOS/budget at token 1) keep freeing slots.  Each job
+        advances at most one chunk per boundary — long prompts interleave
+        with decode instead of stalling it."""
+        for job in self._jobs:
+            job.stepped = False
         while True:
-            adms = self.sched.admit()
-            if not adms:
-                return
-            for adm in adms:  # an instant (EOS-at-prefill) retirement frees
-                self._prefill_into(adm)  # its slot; the loop re-admits
+            adms = self.sched.admit(gate=self._gate)
+            for adm in adms:
+                self._begin(adm)
+            pending = [j for j in self._jobs if not j.stepped]
+            if not pending:
+                if not adms:
+                    return
+                continue
+            for job in pending:
+                job.stepped = True
+                self._run_chunk(job)
+
+    # -- block tables --------------------------------------------------------
+    def _release(self, rid: int) -> None:
+        """Retirement: drop the request's block refs (registered prompt
+        blocks fall back to the evictable prefix cache) and return unspent
+        reservation credits."""
+        bs = self._req_blocks.pop(rid)
+        for b in bs.table:
+            self.pool.release(b)
+        if bs.reserved:
+            self.pool.unreserve(bs.reserved)
+            bs.reserved = 0
+        self.stats.peak_blocks = self.pool.peak_live
+        self.stats.cow_copies = self.pool.cow_copies
+
+    def _decode_tables(self, running) -> np.ndarray:
+        """(bucket, n_max) int32 block tables for this decode step.  Rows of
+        non-running lanes stay all-sentinel, so their (garbage) writes land
+        in block 0.  Extends each running request's table for the token about
+        to be written, spending reserved credits — and copy-on-write guards
+        the (unreachable by construction: prompts pad to whole blocks) case
+        of a shared write block."""
+        arr = np.zeros((self._bucket, self._n_max), np.int32)
+        for slot, rid in running:
+            bs = self._req_blocks[rid]
+            wi = bs.pos // self.block_size
+            while len(bs.table) <= wi:
+                bs.table.append(self.pool.alloc(reserved=True))
+                bs.reserved -= 1
+            if not self.pool.writable(bs.table[wi]):
+                new = self.pool.cow(bs.table[wi])
+                src, dst = np.int32(bs.table[wi]), np.int32(new)
+                cexe = self._exe(
+                    ("cow", self._rung_token), lambda: _copy_block,
+                    (self._pages, src, dst), donate=(0,),
+                    out_pin=lambda: self._cache_shardings(self._pages),
+                )
+                self._pages = cexe(self._pages, src, dst)
+                bs.table[wi] = new
+                self.stats.cow_copies = self.pool.cow_copies
+            arr[slot, :len(bs.table)] = bs.table
+        self.stats.peak_blocks = self.pool.peak_live
+        return arr
 
     # -- the serving step ----------------------------------------------------
     def step(self) -> bool:
         """One boundary (retire happened in the previous step's records ->
-        resize -> reshard -> admit) plus one decode step over the slot
-        table.  Returns False once fully drained."""
+        resize -> reshard -> admit/prefill-chunks) plus one decode step over
+        the slot table.  Returns False once fully drained."""
         sch = self.sched
         if not sch.has_work:
+            # a drained engine starts the next trace fresh: a stale shrink
+            # streak would defeat shrink_patience on its first dip
+            self._shrink_streak = 0
             return False
         target = sch.target_slots()
         if 0 < target < self._bucket:
@@ -457,38 +764,45 @@ class ServeEngine:
         if target != self._bucket:
             self._shrink_streak = 0
         self._resize(target)
-        self._admit()
+        self._prefill_work()
         self.stats.retired = sch.retired  # prefill-instant retirements count
-        live = sch.live_slots()
-        if not live:  # everything admitted retired at prefill
+        running = sch.running_slots()
+        if not running:  # nothing decoding (drained, or all mid-prefill)
             return True
         toks = sch.next_tokens()[:, None]
         rids = sch.slot_rids()
+        tables = self._decode_tables(running)
         exe = self._exe(
             ("decode", self._bucket, self._rung_token), self._decode_fn,
-            (self.params, self._cache, toks, rids), donate=(1,),
-            out_pin=lambda: (None, self._cache_shardings(self._cache)),
+            (self.params, self._cache, self._pages, tables, toks, rids),
+            donate=(1, 2),
+            out_pin=lambda: (
+                None,
+                self._cache_shardings(self._cache),
+                self._cache_shardings(self._pages),
+            ),
             kind="decode",
         )
         t0 = time.perf_counter()
-        nxt, self._cache = exe(self.params, self._cache, toks, rids)
+        nxt, self._cache, self._pages = exe(
+            self.params, self._cache, self._pages, tables, toks, rids
+        )
         self.stats.dispatch_wall_s += time.perf_counter() - t0
         nxt = np.asarray(nxt)  # the per-step host transfer: one (B,) vector
         self.stats.steps += 1
         self.stats.slot_steps += self._bucket
-        for slot, _ in live:
-            sch.record(slot, int(nxt[slot]))
-        self.stats.tokens += len(live)
+        for slot, rid in running:
+            self._req_blocks[rid].pos += 1
+            if sch.record(slot, int(nxt[slot])):
+                self._release(rid)
+        self._count_token(len(running))
         self.stats.retired = sch.retired
-        self._thru.add(float(len(live)))
-        rate = self._thru.rate()
-        if rate is not None:
-            self.stats.tokens_per_sec = rate
         return True
 
     def drain(self) -> None:
         while self.step():
             pass
+        self.pool.check()  # drained: conservation + zero leaked blocks
 
     def result(self, rid: int) -> Result:
         return self.sched.result(rid)

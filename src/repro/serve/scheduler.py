@@ -123,12 +123,20 @@ class Scheduler:
         self._slots = [rid for _, rid in live] + [None] * (n - len(live))
         return idx
 
-    def admit(self) -> list[Admission]:
+    def admit(self, gate=None) -> list[Admission]:
         """Fill free slots FIFO from the queue (one pass; callers loop when
-        an admission retires instantly and frees its slot again)."""
+        an admission retires instantly and frees its slot again).
+
+        ``gate(rid, request) -> bool`` vetoes admissions the caller cannot
+        resource yet (the engine's block-pool reservation check).  A gated
+        head-of-queue STOPS the pass — admission stays strictly FIFO, so a
+        large request is never starved by smaller ones slipping past it.
+        """
         out: list[Admission] = []
         for i, rid in enumerate(self._slots):
             if rid is None and self._queue:
+                if gate is not None and not gate(self._queue[0], self._reqs[self._queue[0]]):
+                    break
                 nrid = self._queue.popleft()
                 self._slots[i] = nrid
                 out.append(Admission(slot=i, rid=nrid, request=self._reqs[nrid]))
@@ -176,12 +184,30 @@ class Scheduler:
         """[(slot, rid)] for every occupied slot, in slot order."""
         return [(i, rid) for i, rid in enumerate(self._slots) if rid is not None]
 
+    def running_slots(self) -> list[tuple[int, int]]:
+        """[(slot, rid)] for slots that are DECODING — occupied and holding at
+        least one emitted token.  An occupied slot with no tokens yet is still
+        loading (chunked prefill in flight); it keeps its lane but must not
+        decode or feed a stale token."""
+        return [
+            (i, rid)
+            for i, rid in enumerate(self._slots)
+            if rid is not None and self._tokens[rid]
+        ]
+
+    def slot_of(self, rid: int) -> int:
+        """The slot currently holding ``rid`` (raises if it is not resident)."""
+        for i, r in enumerate(self._slots):
+            if r == rid:
+                return i
+        raise KeyError(f"request {rid} holds no slot")
+
     def next_tokens(self) -> np.ndarray:
-        """(capacity,) int32 feed for the next decode step: each live slot's
-        last emitted token; 0 for free (padded) lanes."""
+        """(capacity,) int32 feed for the next decode step: each running
+        slot's last emitted token; 0 for free or still-loading lanes."""
         out = np.zeros(len(self._slots), np.int32)
         for i, rid in enumerate(self._slots):
-            if rid is not None:
+            if rid is not None and self._tokens[rid]:
                 out[i] = self._tokens[rid][-1]
         return out
 

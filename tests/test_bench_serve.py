@@ -31,3 +31,21 @@ def test_bench_serve_smoke(tmp_path):
     assert record["elastic_vs_fixed_tokens_per_sec"] > 0
     names = [name for name, _, _ in rows]
     assert "serve_elastic_ladder" in names and "serve_fixed_full_mesh" in names
+    assert "serve_paged_prefix_sharing" in names
+    # the paged section: pool footprint + prefix-sharing schema
+    pg = record["paged"]
+    for key in ("block_size", "pool_blocks", "peak_blocks",
+                "peak_resident_tokens", "dense_resident_tokens",
+                "memory_vs_dense", "cow_copies", "shared_prefix",
+                "no_sharing", "sharing_vs_dense_tokens_per_sec"):
+        assert key in pg, key
+    # paged memory tracks resident tokens, far under the dense preallocation
+    assert 0 < pg["peak_resident_tokens"] < pg["dense_resident_tokens"]
+    assert pg["memory_vs_dense"] < 0.5
+    sh, ns = pg["shared_prefix"], pg["no_sharing"]
+    # both arms delivered the same tokens; sharing skipped real prefill work
+    assert sh["tokens"] == ns["tokens"] > 0
+    assert 0 < sh["prefill_chunks"] < ns["prefill_chunks"]
+    assert sh["shared_prefill_hits"] > 0 and ns["shared_prefill_hits"] == 0
+    assert sh["compiles_in_measured_pass"] == 0
+    assert sh["tokens_per_sec"] > 0 and ns["tokens_per_sec"] > 0

@@ -1,0 +1,220 @@
+"""BlockPool property tests (model-free, no jax): random request-lifecycle
+walks must never double-assign a block, never drive a refcount negative,
+never leak a block after drain, and never re-prefill a registered shared
+prefix.  Mirrors tests/test_serve_sched.py for the pool half of the paged
+serving substrate."""
+
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serve.blocks import BlockPool, PoolExhausted, chain_keys
+
+
+def _stream(rid, nblocks, block, shared_prefix=0):
+    """Deterministic per-request token stream; the first ``shared_prefix``
+    blocks are request-independent (a shared system prompt)."""
+    out = []
+    for i in range(nblocks * block):
+        salt = 0 if i < shared_prefix * block else rid * 131
+        out.append(1 + (salt + i * 7) % 997)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chain keys
+# ---------------------------------------------------------------------------
+
+
+def test_chain_keys_are_prefix_commitments():
+    a = chain_keys(_stream(1, 4, 8, shared_prefix=2), 8)
+    b = chain_keys(_stream(2, 4, 8, shared_prefix=2), 8)
+    assert len(a) == len(b) == 4
+    assert a[:2] == b[:2]  # shared blocks hash identically
+    assert a[2] != b[2] and a[3] != b[3]  # divergence poisons the chain
+    # same tokens, different block boundary -> different keys
+    assert chain_keys(_stream(1, 4, 8), 4)[-1] != a[-1]
+
+
+def test_chain_keys_reject_partial_blocks():
+    with pytest.raises(ValueError, match="block-multiple"):
+        chain_keys([1, 2, 3], 2)
+
+
+# ---------------------------------------------------------------------------
+# targeted unit invariants
+# ---------------------------------------------------------------------------
+
+
+def test_release_refuses_negative_refcount():
+    pool = BlockPool(4, 8)
+    bid = pool.alloc()
+    pool.release(bid)
+    with pytest.raises(ValueError, match="below 0"):
+        pool.release(bid)
+
+
+def test_alloc_never_double_assigns():
+    pool = BlockPool(8, 4)
+    ids = [pool.alloc() for _ in range(7)]
+    assert len(set(ids)) == 7 and 0 not in ids  # distinct, sentinel excluded
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+
+
+def test_reservation_credits():
+    pool = BlockPool(6, 4)  # 5 usable
+    pool.reserve(5)
+    assert pool.available() == 0
+    with pytest.raises(PoolExhausted):
+        pool.reserve(1)
+    with pytest.raises(PoolExhausted):
+        pool.alloc()  # unreserved alloc cannot eat promised blocks
+    ids = [pool.alloc(reserved=True) for _ in range(5)]
+    assert len(set(ids)) == 5
+    with pytest.raises(ValueError, match="no outstanding reservation"):
+        pool.alloc(reserved=True)
+    for b in ids:
+        pool.release(b)
+    with pytest.raises(ValueError, match="exceeds"):
+        pool.unreserve(1)
+    pool.check()
+
+
+def test_cow_guards_shared_and_registered_blocks():
+    pool = BlockPool(8, 4)
+    keys = chain_keys(_stream(0, 1, 4), 4)
+    bid = pool.alloc()
+    assert pool.writable(bid)
+    pool.register(keys[0], bid)
+    assert not pool.writable(bid)  # registered: an in-place write would
+    pool.retain(bid)  # corrupt the shared prefix
+    new = pool.cow(bid)
+    assert new != bid and pool.writable(new)
+    assert pool.cow_copies == 1
+    with pytest.raises(ValueError, match="exclusively"):
+        pool.cow(new)
+    pool.release(new)
+    pool.release(bid)  # cow dropped the writer's ref; this is the last one
+    assert pool.cached == 1  # registered: cached, not freed
+    pool.check()
+
+
+def test_shared_prefix_admission_never_reprefills():
+    """Once a prompt chain is registered, an identical prompt matches every
+    block — the engine adopts them instead of recomputing (and a cached
+    block revived by ``retain`` keeps its contents matchable)."""
+    pool = BlockPool(16, 8)
+    toks = _stream(3, 4, 8)
+    keys = chain_keys(toks, 8)
+    ids = []
+    for k in keys:
+        b = pool.alloc()
+        pool.register(k, b)
+        ids.append(b)
+    matched, ok = pool.admit_need(keys, 6)
+    assert matched == ids and ok  # full match: zero blocks to prefill
+    for b in ids:
+        pool.release(b)  # request retires -> blocks park in the LRU cache
+    assert pool.cached == 4 and pool.live == 0
+    matched, ok = pool.admit_need(keys, 6)
+    assert matched == ids  # sharing survives across non-overlapping requests
+    for b in matched:
+        pool.retain(b)
+    assert pool.live == 4 and pool.cached == 0
+    for b in matched:
+        pool.release(b)
+    pool.check()
+
+
+def test_eviction_deregisters_lru_first():
+    pool = BlockPool(4, 2)  # 3 usable
+    keys = chain_keys(_stream(1, 3, 2), 2)
+    ids = []
+    for k in keys:
+        b = pool.alloc()
+        pool.register(k, b)
+        ids.append(b)
+    for b in ids:
+        pool.release(b)  # all cached, LRU order = release order
+    got = pool.alloc()  # must evict ids[0] (least recently cached)
+    assert got == ids[0]
+    assert pool.match(keys) == []  # chain broken at block 0
+    pool.release(got)
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# random lifecycle walks
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(num_blocks=st.sampled_from([4, 8, 17, 40]),
+       block=st.sampled_from([1, 4, 8]),
+       seed=st.integers(min_value=0, max_value=9999))
+def test_pool_walk_invariants(num_blocks, block, seed):
+    import random
+
+    rng = random.Random(seed)
+    pool = BlockPool(num_blocks, block)
+    live = {}  # rid -> {"table": [bid], "reserved": n, "decode_left": n}
+    next_rid = 0
+    for _ in range(200):
+        op = rng.random()
+        if op < 0.45:  # try to admit a request
+            nb_prompt = rng.randint(1, max(1, (num_blocks - 1) // 2))
+            decode = rng.randint(0, 3)
+            shared = rng.randint(0, 2)
+            toks = _stream(next_rid % 5, nb_prompt, block, shared_prefix=shared)
+            keys = chain_keys(toks, block)
+            total = nb_prompt + decode
+            matched, ok = pool.admit_need(keys, total)
+            assert len(matched) <= nb_prompt
+            if not ok or total > num_blocks - 1:
+                continue
+            for b in matched:
+                pool.retain(b)
+            pool.reserve(total - len(matched))
+            table = list(matched)
+            while len(table) < nb_prompt:
+                b = pool.alloc(reserved=True)
+                # no double-assignment: a fresh block is in NO other table
+                assert all(b not in st_["table"] for st_ in live.values())
+                assert b not in table
+                table.append(b)
+            for k, b in zip(keys, table):
+                pool.register(k, b)
+            live[next_rid] = {
+                "table": table,
+                "reserved": total - nb_prompt,
+                "decode_left": decode,
+            }
+            next_rid += 1
+        elif op < 0.75 and live:  # one decode-block step for a random request
+            rid = rng.choice(list(live))
+            st_ = live[rid]
+            if st_["decode_left"] > 0:
+                b = pool.alloc(reserved=True)
+                assert all(b not in o["table"] for o in live.values())
+                st_["table"].append(b)
+                st_["reserved"] -= 1
+                st_["decode_left"] -= 1
+        elif live:  # retire a random request
+            rid = rng.choice(list(live))
+            st_ = live.pop(rid)
+            for b in st_["table"]:
+                pool.release(b)
+            if st_["reserved"]:
+                pool.unreserve(st_["reserved"])
+        pool.check()  # conservation + disjointness at every step
+        assert pool.available() >= 0
+
+    for rid, st_ in list(live.items()):  # drain
+        for b in st_["table"]:
+            pool.release(b)
+        if st_["reserved"]:
+            pool.unreserve(st_["reserved"])
+    pool.check()
+    # zero leaks: nothing live or promised once every request retired
+    assert pool.live == 0 and pool.reserved == 0
+    assert pool.free + pool.cached == pool.num_blocks - 1
