@@ -67,13 +67,31 @@ def summarize(recs: list[dict]) -> dict:
     return {"ok": len(ok), "skipped": len(skipped), "error": len(err), "dominant": dominant}
 
 
+def _paged_decode_row() -> tuple[str, float, str]:
+    """Bytes-moved roofline for one paged decode step: the fused kernel
+    (gather folded into the BlockSpec index_map) vs the XLA lane's
+    materialise-then-attend, on a representative serving shape (half-full
+    ragged table windows).  Same model as benchmarks/bench_kernels.py."""
+    from benchmarks.bench_kernels import _paged_bytes
+
+    b, n_max, blk, kv, hd = 64, 32, 16, 8, 128
+    lengths = [(r * 37) % (n_max * blk) + 1 for r in range(b)]  # ragged
+    fused, mat = _paged_bytes(lengths, n_max, blk, kv, hd, itemsize=2)
+    assert fused < mat, (fused, mat)
+    return (
+        "roofline_paged_decode_bytes", 0.0,
+        f"fused={fused}B;materialised={mat}B;ratio={fused/mat:.3f};"
+        f"shape=b{b}n{n_max}blk{blk}kv{kv}hd{hd}bf16",
+    )
+
+
 def run() -> list[tuple[str, float, str]]:
     recs = load_records("runs/dryrun_final")
     s = summarize(recs)
     rows = [(
         "roofline_summary", 0.0,
         f"ok={s['ok']};skipped={s['skipped']};error={s['error']};dominant={s['dominant']}",
-    )]
+    ), _paged_decode_row()]
     # three headline cells
     for key in [("llama3-405b", "train_4k", "pod16x16"),
                 ("kimi-k2-1t-a32b", "train_4k", "pod16x16"),

@@ -12,6 +12,12 @@ import dataclasses
 import math
 from typing import Literal
 
+# The ONE attn_impl="auto" flip point: sequences at or below this run dense
+# attention, longer ones run the tiled lane (flash, or the Pallas kernels
+# when attn_impl="pallas").  models/attention.py::resolve_impl and
+# choose_attention both read it — do not fork it inline again.
+FLASH_THRESHOLD = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -62,7 +68,8 @@ class ModelConfig:
     scan_layers: bool = True
     remat: bool = True
     xent_chunk: int = 512
-    attn_impl: str = "auto"  # 'auto' | 'dense' | 'flash'
+    attn_impl: str = "auto"  # 'auto' | 'dense' | 'flash' | 'pallas'
+    flash_threshold: int = FLASH_THRESHOLD  # auto: dense iff s <= threshold
     flash_q_block: int = 512
     flash_kv_block: int = 1024
     moe_groups: int = 0  # 0 => data shard count at call time

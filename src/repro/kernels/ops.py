@@ -1,4 +1,10 @@
-"""Jit-ready wrappers around the Pallas kernels with cost-model dispatch."""
+"""Jit-ready wrappers around the Pallas kernels with cost-model dispatch.
+
+``default_interpret`` is the one platform switch for the whole kernel lane:
+compiled Pallas on TPU, interpret mode (pure-jax emulation, still inside
+jit) everywhere else — tests exercise the real kernel bodies on CPU.
+Callers can force either mode by passing ``interpret=`` explicitly.
+"""
 
 from __future__ import annotations
 
@@ -9,6 +15,11 @@ import jax.numpy as jnp
 
 from repro.kernels import psgn as psgn_kernels
 from repro.kernels import quant as quant_kernels
+
+
+def default_interpret() -> bool:
+    """True (interpret mode) everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
 
 
 def choose_method(s: int, d_in: int, d_out: int) -> str:
@@ -24,13 +35,16 @@ def persample_sq_norm(
     x: jax.Array,  # (B, S, Din) or (B, Din)
     delta: jax.Array,  # (B, S, Dout) or (B, Dout)
     method: str = "auto",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """(B,) per-sample squared Frobenius norm of the dense-layer gradient.
 
     2D inputs (no sequence axis) factorise exactly:
     ||x_b delta_b^T||_F^2 = ||x_b||^2 * ||delta_b||^2 — no kernel needed.
+    ``interpret=None`` resolves via ``default_interpret()``.
     """
+    if interpret is None:
+        interpret = default_interpret()
     if x.ndim == 2:
         xn = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
         dn = jnp.sum(jnp.square(delta.astype(jnp.float32)), axis=-1)
@@ -61,15 +75,69 @@ def _round_pow2(n: int) -> int:
     return p
 
 
-def persample_sq_norm_tree(acts: dict, deltas: dict, scale: float = 1.0) -> jax.Array:
+def _bias_sq_norm(d: jax.Array) -> jax.Array:
+    """(B,) per-sample sq-norm of the BIAS gradient for the same layer: the
+    per-sample bias grad is the sequence-sum of the output delta."""
+    df = d.astype(jnp.float32)
+    if df.ndim == 3:
+        df = jnp.sum(df, axis=1)
+    return jnp.sum(jnp.square(df), axis=-1)
+
+
+def persample_sq_norm_tree(
+    acts: dict,
+    deltas: dict,
+    scale: float = 1.0,
+    *,
+    bias: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
     """Sum per-sample sq-norms over a dict of dense layers (gram-tier total).
 
     ``deltas`` are probe gradients of a MEAN loss — multiply by batch size
-    (``scale``) to undo the 1/B factor."""
-    total = None
+    (``scale``) to undo the 1/B factor.
+
+    Layers whose shapes match and whose cost model picks the direct kernel
+    are STACKED and dispatched to ``psgn.psgn_fused`` — one launch with the
+    cross-layer sum fused in VMEM — instead of one launch per layer.
+    ``bias=True`` adds each layer's bias-gradient sq-norm ``||sum_s d_s||^2``
+    (exact for bias-complete dense models; probes see the same delta the
+    bias does).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    groups: dict[tuple, list[str]] = {}
     for name, x in acts.items():
-        d = deltas[name] * scale
-        v = persample_sq_norm(x, d)
+        d = deltas[name]
+        if x.ndim == 3 and choose_method(x.shape[1], x.shape[2], d.shape[2]) == "direct":
+            key = (x.shape, d.shape, x.dtype, d.dtype)
+        else:
+            key = ("solo", name)
+        groups.setdefault(key, []).append(name)
+
+    total = None
+    for key, names in groups.items():
+        if key[0] != "solo" and len(names) >= 2:
+            xs = jnp.stack([acts[n] for n in names])
+            ds = jnp.stack([deltas[n] * scale for n in names])
+            s, d_in = xs.shape[2], xs.shape[3]
+            d_out = ds.shape[3]
+            v = psgn_kernels.psgn_fused(
+                xs, ds,
+                block_s=min(512, _round_pow2(s)),
+                block_i=min(128, _round_pow2(d_in)),
+                block_j=min(128, _round_pow2(d_out)),
+                interpret=interpret,
+            )
+        else:
+            v = None
+            for n in names:
+                vi = persample_sq_norm(acts[n], deltas[n] * scale,
+                                       interpret=interpret)
+                v = vi if v is None else v + vi
+        if bias:
+            for n in names:
+                v = v + _bias_sq_norm(deltas[n] * scale)
         total = v if total is None else total + v
     return total
 

@@ -22,6 +22,12 @@ makes BackPACK double peak memory (paper Table 2):
 ops.choose_method picks by FLOP count; ref.py is the pure-jnp oracle.
 Kernels are VALIDATED in interpret mode on CPU (tests/test_kernels.py) and
 target TPU for execution.
+
+FUSED (psgn_fused) stacks L same-shape dense layers into one launch — grid
+(B, L, Din/bi, Dout/bj, S/bs) — and accumulates the CROSS-LAYER sum straight
+into a (B, 1) output block that stays resident across all inner grid steps,
+so the exact diversity tier issues one kernel for a whole probe tree instead
+of L separate launches with an XLA reduction after each.
 """
 
 from __future__ import annotations
@@ -166,3 +172,81 @@ def psgn_gram(
         interpret=interpret,
     )(x, x, delta, delta)
     return partials.sum(axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# FUSED: L stacked same-shape layers, one launch, cross-layer sum in-place
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(x_ref, d_ref, o_ref, acc_ref, *, n_s: int):
+    ll = pl.program_id(1)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    s = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(jnp.logical_and(ll == 0, i == 0),
+                             jnp.logical_and(j == 0, s == 0)))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(s == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]  # (bs, bi)
+    d = d_ref[0, 0]  # (bs, bj)
+    acc_ref[...] += jax.lax.dot_general(
+        x, d, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(s == n_s - 1)
+    def _finish():
+        blk = acc_ref[...]
+        o_ref[0, 0] += jnp.sum(blk * blk)
+
+
+def psgn_fused(
+    x: jax.Array,  # (L, B, S, Din) — L same-shape dense layers, stacked
+    delta: jax.Array,  # (L, B, S, Dout)
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """(B,) sum over the L layers of per-sample ||X^T D||_F^2, one launch.
+
+    The (B, 1) output block is revisited by every (l, i, j, s) step for a
+    fixed b (the batch axis is outermost), so the cross-layer + cross-tile
+    reduction happens in VMEM instead of as L separate XLA reductions.
+    """
+    assert x.ndim == 4 and delta.ndim == 4 and x.shape[:3] == delta.shape[:3]
+    n_l, b = x.shape[0], x.shape[1]
+    x = _pad_to(_pad_to(x, 3, block_i), 2, block_s)
+    delta = _pad_to(_pad_to(delta, 3, block_j), 2, block_s)
+    s, din = x.shape[2], x.shape[3]
+    dout = delta.shape[3]
+    n_i, n_j, n_s = din // block_i, dout // block_j, s // block_s
+
+    grid = (b, n_l, n_i, n_j, n_s)
+    scratch = (
+        [pltpu.VMEM((block_i, block_j), jnp.float32)]
+        if _VMEM is not None
+        else [pl.BlockSpec(memory_space=None)]  # pragma: no cover
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, n_s=n_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_s, block_i),
+                         lambda bb, ll, i, j, ss: (ll, bb, ss, i)),
+            pl.BlockSpec((1, 1, block_s, block_j),
+                         lambda bb, ll, i, j, ss: (ll, bb, ss, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bb, ll, i, j, ss: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, delta)
+    return out[:, 0]

@@ -32,3 +32,80 @@ def quantize_int8_ref(x: jnp.ndarray):
 
 def dequantize_int8_ref(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)
+
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # (Sq,) absolute query positions
+    k_pos: jnp.ndarray,  # (Sk,) absolute key positions
+    k_valid: jnp.ndarray,  # (Sk,) bool
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Dense masked attention at explicit positions — the oracle every
+    Pallas attention kernel is validated against (f32 throughout, softcap
+    applied before the mask, softmax over the full key axis at once)."""
+    hd = q.shape[-1]
+    n_rep = q.shape[2] // k.shape[2]
+    kr = jnp.repeat(k.astype(jnp.float32), n_rep, axis=2)
+    vr = jnp.repeat(v.astype(jnp.float32), n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr)
+    logits = logits * (hd ** -0.5)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.broadcast_to(k_valid[None, :], rel.shape)
+    if causal:
+        ok = ok & (rel >= 0)
+    if window is not None:
+        ok = ok & (rel < window)
+    logits = jnp.where(ok[None, None], logits, _NEG_INF)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+
+
+def flash_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """Self-attention special case (positions are just aranges)."""
+    return attention_ref(
+        q, k, v,
+        jnp.arange(q.shape[1]), jnp.arange(k.shape[1]),
+        jnp.ones((k.shape[1],), bool),
+        causal=causal, window=window, softcap=softcap,
+    )
+
+
+def paged_decode_ref(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    pool_k: jnp.ndarray,   # (num_blocks, block, KV, hd)
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,   # (B, n_max) int32
+    lengths: jnp.ndarray,  # (B,) valid context per row
+    *,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Materialised-gather decode: take() every table entry (sentinel and
+    tail included), then mask by per-row length — exactly the XLA lane the
+    fused kernel replaces."""
+    b, n_max = tables.shape
+    blk = pool_k.shape[1]
+    gk = jnp.take(pool_k, tables.reshape(-1), axis=0)
+    gk = gk.reshape(b, n_max * blk, pool_k.shape[2], pool_k.shape[3])
+    gv = jnp.take(pool_v, tables.reshape(-1), axis=0)
+    gv = gv.reshape(b, n_max * blk, pool_v.shape[2], pool_v.shape[3])
+    outs = []
+    for row in range(b):
+        pos = jnp.arange(n_max * blk)
+        outs.append(attention_ref(
+            q[row:row + 1], gk[row:row + 1], gv[row:row + 1],
+            jnp.full((1,), lengths[row] - 1), pos, pos < lengths[row],
+            causal=False, window=None, softcap=softcap,
+        ))
+    return jnp.concatenate(outs, axis=0)

@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.configs import base as base_configs
 from repro.dist.plan import constrain
 
 NEG_INF = -1e30
@@ -319,8 +320,30 @@ def decode_attention(
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
-def choose_attention(sq: int, sk: int, flash_threshold: int = 4096):
-    """Pick the dense or flash implementation by sequence length."""
+def choose_attention(sq: int, sk: int, flash_threshold: int | None = None):
+    """Pick the dense or flash implementation by sequence length (the one
+    flip point lives in configs/base.py::FLASH_THRESHOLD)."""
+    if flash_threshold is None:
+        flash_threshold = base_configs.FLASH_THRESHOLD
     if max(sq, sk) > flash_threshold:
         return flash_attention
     return functools.partial(attention)
+
+
+def resolve_impl(cfg, s: int) -> str:
+    """Resolve cfg.attn_impl for a length-``s`` self-attention call site.
+
+    'auto' flips from dense to flash at cfg.flash_threshold (one constant,
+    configs/base.py) provided the length tiles evenly; explicit 'dense' /
+    'flash' / 'pallas' pass through.  'pallas' routes to the kernels in
+    kernels/attention.py, which pad ragged lengths internally (no
+    divisibility requirement) and run in interpret mode off-TPU.
+    """
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = (
+            "flash"
+            if s > cfg.flash_threshold and s % cfg.flash_q_block == 0
+            else "dense"
+        )
+    return impl

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.plan import constrain
+from repro.kernels import attention as kernels_attn
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
@@ -149,10 +150,13 @@ def _attn_sublayer(cfg: ModelConfig, p: dict, x: jax.Array, kind: str,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     window = cfg.window if kind == "attn_local" else None
-    impl = cfg.attn_impl
-    if impl == "auto":
-        impl = "flash" if s > 1024 and s % cfg.flash_q_block == 0 else "dense"
-    if impl == "flash":
+    impl = attn_lib.resolve_impl(cfg, s)
+    if impl == "pallas":
+        out = kernels_attn.flash_attention(
+            q, k, v, cfg.causal, window, cfg.attn_softcap,
+            min(cfg.flash_q_block, s), min(cfg.flash_kv_block, s),
+        )
+    elif impl == "flash":
         out = attn_lib.flash_attention(
             q, k, v, cfg.causal, window, cfg.attn_softcap,
             min(cfg.flash_q_block, s), min(cfg.flash_kv_block, s),
@@ -484,12 +488,20 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 off = jnp.mod(posv, blk_sz)
                 pk = pk.at[wb, off].set(k[:, 0])
                 pv = pv.at[wb, off].set(v[:, 0])
-                # write-then-read: the gathered view includes this token
-                gk = jnp.take(pk, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
-                gv = jnp.take(pv, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
-                h = attn_lib.decode_attention(
-                    q, gk, gv, posv + 1, softcap=cfg.attn_softcap, window=None,
-                )
+                # write-then-read: this token is visible to its own query
+                if cfg.attn_impl == "pallas":
+                    # fused lane: the table gather happens inside the kernel's
+                    # KV loop — the (B, n_max*block, KV, hd) gathered context
+                    # below never materialises
+                    h = kernels_attn.paged_decode_attention(
+                        q, pk, pv, tables, posv + 1, softcap=cfg.attn_softcap,
+                    )
+                else:
+                    gk = jnp.take(pk, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
+                    gv = jnp.take(pv, tables, axis=0).reshape(b, -1, cfg.num_kv_heads, hd)
+                    h = attn_lib.decode_attention(
+                        q, gk, gv, posv + 1, softcap=cfg.attn_softcap, window=None,
+                    )
                 h = dense(ap["o"], h.reshape(b, 1, cfg.num_heads * hd))
                 new_pages[f"pos{p}"] = {"k": pk, "v": pv}
             else:
@@ -588,11 +600,14 @@ def prefill_step(cfg: ModelConfig, params: PyTree, batch: dict,
                 k = apply_rope(k, positions, cfg.rope_theta)
                 window = cfg.window if kind == "attn_local" else None
                 # honor cfg.attn_impl exactly like _attn_sublayer: "auto"
-                # picks by length, a pinned "dense"/"flash" is obeyed
-                impl = cfg.attn_impl
-                if impl == "auto":
-                    impl = "flash" if s > 1024 and s % cfg.flash_q_block == 0 else "dense"
-                if impl == "flash":
+                # picks by length, a pinned impl is obeyed
+                impl = attn_lib.resolve_impl(cfg, s)
+                if impl == "pallas":
+                    h = kernels_attn.flash_attention(
+                        q, k, v, True, window, cfg.attn_softcap,
+                        min(cfg.flash_q_block, s), min(cfg.flash_kv_block, s),
+                    )
+                elif impl == "flash":
                     h = attn_lib.flash_attention(
                         q, k, v, True, window, cfg.attn_softcap,
                         min(cfg.flash_q_block, s), min(cfg.flash_kv_block, s),
@@ -662,6 +677,22 @@ def prefill_chunk(cfg: ModelConfig, params: PyTree, row: PyTree, pages: PyTree,
     q_pos = offset + jnp.arange(c)
     paged = set(paged_positions(cfg))
 
+    def _chunk_attn(q, k, v, k_pos, k_valid, window):
+        # both prior-context layouts funnel through here; the pallas lane
+        # runs the tiled kernel (pads ragged K internally), everything else
+        # keeps the XLA chunk_attention
+        if cfg.attn_impl == "pallas":
+            return kernels_attn.chunk_attention(
+                q, k, v, q_pos, k_pos, k_valid, window=window,
+                softcap=cfg.attn_softcap,
+                q_block=min(cfg.flash_q_block, c),
+                kv_block=min(cfg.flash_kv_block, k.shape[1]),
+            )
+        return attn_lib.chunk_attention(
+            q, k, v, q_pos, k_pos, k_valid, window=window,
+            softcap=cfg.attn_softcap,
+        )
+
     def layer_body(x, scanned):
         layer, lrow, lpages = scanned
         new_row, new_pages = {}, {}
@@ -701,10 +732,10 @@ def prefill_chunk(cfg: ModelConfig, params: PyTree, row: PyTree, pages: PyTree,
                 k_valid = jnp.concatenate(
                     [jnp.arange(prior) < offset, jnp.ones((c,), bool)]
                 )
-                h = attn_lib.chunk_attention(
+                h = _chunk_attn(
                     q, jnp.concatenate([gk, k], axis=1),
                     jnp.concatenate([gv, v], axis=1),
-                    q_pos, k_pos, k_valid, window=None, softcap=cfg.attn_softcap,
+                    k_pos, k_valid, window=None,
                 )
                 h = dense(ap["o"], h.reshape(1, c, cfg.num_heads * hd))
                 pk = pk.at[write_tab].set(k[0].reshape(-1, blk_sz, cfg.num_kv_heads, hd))
@@ -725,11 +756,10 @@ def prefill_chunk(cfg: ModelConfig, params: PyTree, row: PyTree, pages: PyTree,
                 gv = jnp.take(ring_v, idx, axis=1)
                 k_pos = jnp.concatenate([prior_pos, q_pos])
                 k_valid = jnp.concatenate([prior_pos >= 0, jnp.ones((c,), bool)])
-                h = attn_lib.chunk_attention(
+                h = _chunk_attn(
                     q, jnp.concatenate([gk, k], axis=1),
                     jnp.concatenate([gv, v], axis=1),
-                    q_pos, k_pos, k_valid, window=cfg.window,
-                    softcap=cfg.attn_softcap,
+                    k_pos, k_valid, window=cfg.window,
                 )
                 h = dense(ap["o"], h.reshape(1, c, cfg.num_heads * hd))
                 w = min(c, s_c)  # the chunk tail that survives into the ring

@@ -227,10 +227,15 @@ class ServeEngine:
         pool_blocks: int | None = None,
         prefill_chunk: int = 0,
         prefix_sharing: bool = True,
+        attn_impl: str | None = None,
     ):
         if sampler not in SAMPLERS:
             raise ValueError(f"sampler must be one of {SAMPLERS}, got {sampler!r}")
-        self.cfg = cfg.replace(remat=False)
+        # attn_impl="pallas" runs the serving hot loop (paged decode, chunked
+        # prefill, full prefill) on the kernels/attention.py lane
+        self.cfg = cfg.replace(remat=False) if attn_impl is None else cfg.replace(
+            remat=False, attn_impl=attn_impl
+        )
         self.max_slots = int(max_slots)
         self.max_seq = int(max_seq)
         self.sampler = sampler

@@ -282,6 +282,8 @@ class StepEngine:
         dp_size: int = 1,
         donate: bool = True,
         psn_chunk: int | None = None,
+        psn_impl: str = "auto",
+        psn_interpret: bool | None = None,
     ) -> "StepEngine":
         """Engine over generic ``ModelFns`` (the paper's reference models).
 
@@ -312,6 +314,8 @@ class StepEngine:
                 probe_loss=fns.probe_loss,
                 probe_specs=fns.probe_specs,
                 psn_chunk=psn_chunk,
+                psn_impl=psn_impl,
+                psn_interpret=psn_interpret,
             )
 
         eng = cls(build, donate=donate, eval_fn=eval_fn_for(fns))
@@ -334,13 +338,20 @@ class StepEngine:
         donate: bool = True,
         in_shardings=None,
         out_shardings=None,
+        attn_impl: str | None = None,
     ) -> "StepEngine":
         """Engine over the transformer LM loss (production path).
 
         One bucket = one ``num_micro`` (accumulation length); the microbatch
         shape is fixed per mesh, so with ``micro_batch`` given the bucket of
         a global batch of B sequences is ``B // micro_batch``.
+
+        ``attn_impl`` overrides ``cfg.attn_impl`` for the training forward
+        ("pallas" puts the flash kernel — forward AND recompute backward —
+        on the kernels/attention.py lane).
         """
+        if attn_impl is not None:
+            cfg = cfg.replace(attn_impl=attn_impl)
 
         def build(num_micro: int, tier: str | None = None) -> Callable:
             return step_lib.make_train_step(

@@ -81,6 +81,8 @@ def make_train_step(
     probe_loss: Callable | None = None,
     probe_specs: Callable | None = None,
     psn_chunk: int | None = None,
+    psn_impl: str = "auto",
+    psn_interpret: bool | None = None,
 ) -> Callable[[TrainState, dict, jax.Array], tuple[TrainState, dict]]:
     """Returns train_step(state, batch, lr) -> (state, metrics).
 
@@ -96,6 +98,17 @@ def make_train_step(
     ``psn_chunk`` bounds the exact tier's vmap width: per-sample gradients
     are materialised ``psn_chunk`` samples at a time (peak extra memory
     ``psn_chunk x param-size`` instead of ``microbatch x param-size``).
+
+    ``psn_impl`` picks how the EXACT tier computes per-sample norms:
+    "vmap" is vmap(grad(example_loss)) — reference semantics for any model;
+    "kernel" replaces it with one probe-gradient pass through the fused
+    kernels/psgn lane (``||X^T D||^2`` plus the bias terms ``||sum_s d||^2``
+    per probed layer) — no per-sample gradient trees at all, exact for
+    bias-complete dense models, requires ``probe_loss``/``probe_specs``.
+    "auto" keeps vmap whenever ``example_loss`` is provided (bit-stable
+    default) and falls back to the kernel path when only probes exist.
+    ``psn_interpret`` forces the Pallas interpret flag (None = on-TPU
+    detection via kernels/ops.default_interpret).
     """
     if loss_fn is None:
         if cfg is None:
@@ -105,17 +118,46 @@ def make_train_step(
     else:
         aux = has_aux if has_aux is not None else False
         base_loss = loss_fn if aux else (lambda p, b: (loss_fn(p, b), {}))
+    if psn_impl not in ("auto", "vmap", "kernel"):
+        raise ValueError(f"unknown psn_impl {psn_impl!r}")
+    if psn_impl == "auto":
+        psn_impl = "vmap" if example_loss is not None else "kernel"
     if diversity_on:
-        if estimator == "exact" and example_loss is None:
-            raise ValueError("estimator='exact' needs example_loss")
+        if estimator == "exact":
+            if psn_impl == "vmap" and example_loss is None:
+                raise ValueError("estimator='exact' needs example_loss")
+            if psn_impl == "kernel" and (probe_loss is None or probe_specs is None):
+                raise ValueError(
+                    "estimator='exact' with psn_impl='kernel' needs "
+                    "probe_loss and probe_specs"
+                )
         if estimator == "gram" and (probe_loss is None or probe_specs is None):
             raise ValueError("estimator='gram' needs probe_loss and probe_specs")
         if estimator not in ("exact", "gram", "moment"):
             raise ValueError(f"unknown in-step estimator {estimator!r}")
 
+    def _probe_sq_norms(params, mb, *, bias):
+        """One probe-gradient pass -> summed per-sample sq-norms via the
+        Pallas psgn lane (same-shape layers fused into one launch)."""
+        bsz = jax.tree.leaves(mb)[0].shape[0]
+        probes = probe_specs(params, bsz)
+        (_, acts), pgrads = jax.value_and_grad(
+            probe_loss, argnums=1, has_aux=True
+        )(params, probes, mb)
+        return jnp.sum(
+            kernel_ops.persample_sq_norm_tree(
+                acts, pgrads, scale=float(bsz), bias=bias,
+                interpret=psn_interpret,
+            )
+        )
+
     def _micro_sq_contrib(params, mb, mean_grads, micro_global):
         """This microbatch's contribution to DiversityState.sq_norm_sum."""
         if estimator == "exact":
+            if psn_impl == "kernel":
+                # the fused lane: no vmap, no per-sample gradient trees —
+                # bias terms included so dense+bias models stay exact
+                return _probe_sq_norms(params, mb, bias=True)
             # Chunked so the vmap'd per-sample gradient trees never exceed
             # psn_chunk x param-size of live memory (the loop unrolls at
             # trace time; chunk sums accumulate in order).
@@ -129,14 +171,7 @@ def make_train_step(
                 )
             return total
         if estimator == "gram":
-            bsz = jax.tree.leaves(mb)[0].shape[0]
-            probes = probe_specs(params, bsz)
-            (_, acts), pgrads = jax.value_and_grad(
-                probe_loss, argnums=1, has_aux=True
-            )(params, probes, mb)
-            return jnp.sum(
-                kernel_ops.persample_sq_norm_tree(acts, pgrads, scale=float(bsz))
-            )
+            return _probe_sq_norms(params, mb, bias=False)
         m = jnp.float32(micro_global)
         return (m * m) * ptu.tree_sq_norm(mean_grads)
 

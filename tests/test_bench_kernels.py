@@ -1,0 +1,44 @@
+"""CI smoke for the kernel-lane benchmark: the --smoke variant runs in
+seconds and must emit a well-formed BENCH_kernels.json whose paged-decode
+section carries the fused-moves-fewer-bytes invariant."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_kernels  # noqa: E402
+
+
+def test_bench_kernels_smoke(tmp_path):
+    out = tmp_path / "BENCH_kernels.json"
+    rows = bench_kernels.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    assert record["workload"]["task"] == "kernel-lane-microbench"
+    # off-TPU the lane runs in interpret mode (the platform switch)
+    assert record["workload"]["interpret"] is True
+
+    pg = record["paged_decode"]
+    for key in ("batch", "n_max", "block", "kv_heads", "head_dim", "lengths",
+                "fused_us", "materialised_us", "fused_bytes",
+                "materialised_bytes", "bytes_ratio"):
+        assert key in pg, key
+    # the PR's acceptance invariant: the fused gather-in-kernel lane moves
+    # measurably fewer bytes than materialise-then-attend
+    assert 0 < pg["fused_bytes"] < pg["materialised_bytes"]
+    assert pg["bytes_ratio"] < 1.0
+    assert len(pg["lengths"]) == pg["batch"]
+
+    names = [name for name, _, _ in rows]
+    assert any(n.startswith("flash_pallas_b") for n in names)
+    assert any(n.startswith("flash_pallas_bwd_") for n in names)
+    assert any(n.startswith("paged_decode_fused_") for n in names)
+    assert any(n.startswith("psgn_fused_") for n in names)
+    assert any(n.startswith("psgn_direct_") for n in names)
+    assert "quant_int8_1024x1024" in names
+    # json mirrors the CSV rows one-to-one
+    assert [r["name"] for r in record["rows"]] == names
+    for _, us, _ in rows:
+        assert us >= 0.0

@@ -413,3 +413,77 @@ def test_run_logs_zero_diversity(monkeypatch):
     monkeypatch.setattr(t, "run_epoch", lambda: rec2)
     t.run(1, verbose=True)
     assert lines[-1] == "-"
+
+
+def test_exact_tier_kernel_psn_matches_vmap():
+    """psn_impl='kernel' replaces vmap-of-grad per-sample norms with one
+    probe-gradient pass through the fused psgn lane. The MLP is
+    bias-complete dense (every param sits in a probed kernel or bias), so
+    the kernel path is mathematically exact — same sq_norm_sum, same
+    trajectory."""
+    train, _, _ = sigmoid_synthetic(n=256, d=32, seed=2)
+    params = small.mlp_init(jax.random.key(2), 32)
+
+    def run(impl):
+        eng = StepEngine.for_model_fns(_fns(), sgd(), estimator="exact",
+                                       donate=False, psn_impl=impl)
+        state = init_state(params, sgd())
+        for lo in (0, 64):
+            batch = {k: jnp.asarray(v)
+                     for k, v in train.get(np.arange(lo, lo + 64)).items()}
+            state, _ = eng.step(state, batch, 0.1)
+        return state
+
+    ref, ker = run("vmap"), run("kernel")
+    np.testing.assert_allclose(np.asarray(ker.div_state.sq_norm_sum),
+                               np.asarray(ref.div_state.sq_norm_sum),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(ker.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_exact_tier_kernel_requires_probes():
+    fns = ModelFns(batch_loss=small.mlp_batch_loss,
+                   example_loss=small.mlp_loss)
+    with pytest.raises(ValueError, match="probe_loss"):
+        make_train_step(None, sgd(), num_micro=1, loss_fn=fns.batch_loss,
+                        estimator="exact", psn_impl="kernel")
+    with pytest.raises(ValueError, match="unknown psn_impl"):
+        make_train_step(None, sgd(), num_micro=1, loss_fn=fns.batch_loss,
+                        diversity_on=False, psn_impl="pallas?")
+
+
+def test_for_lm_pallas_matches_dense_trajectory():
+    """attn_impl='pallas' routes the training forward AND the recompute
+    backward through kernels/attention.flash_attention; the trajectory must
+    match the XLA dense path to float tolerance and be deterministic."""
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as tf
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=97,
+                      param_dtype="float32", compute_dtype="float32",
+                      xent_chunk=32, remat=False)
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 97, size=(8, 17), dtype=np.int64)
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+    params = tf.init_params(cfg, jax.random.key(5))
+
+    def run(attn_impl):
+        eng = StepEngine.for_lm(cfg, sgd(momentum=0.9), micro_batch=4,
+                                donate=False, attn_impl=attn_impl)
+        state = init_state(params, sgd(momentum=0.9))
+        losses = []
+        for _ in range(3):
+            state, m = eng.step(state, batch, 0.05)
+            losses.append(float(m["loss"]))
+        return state, losses
+
+    st_d, loss_d = run(None)
+    st_p, loss_p = run("pallas")
+    st_p2, loss_p2 = run("pallas")
+    assert loss_p == loss_p2  # kernel lane is deterministic
+    np.testing.assert_allclose(loss_p, loss_d, rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(st_d.params), jax.tree.leaves(st_p.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)

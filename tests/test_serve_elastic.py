@@ -318,3 +318,17 @@ def test_prompt_beyond_max_seq_raises():
 def test_unknown_sampler_raises():
     with pytest.raises(ValueError, match="sampler"):
         ServeEngine(CFG, PARAMS, sampler="beam")
+
+
+@pytest.mark.slow
+def test_every_rung_matches_oracle_pallas(golden):
+    """The PR 7 kernel lane under the elastic ladder: every rung, with
+    attn_impl='pallas' (fused paged decode + Pallas prefill), stays
+    token-identical to the single-device XLA oracle."""
+    reqs, expected = golden
+    ladder = MeshLadder(granule=1)
+    for rung in ladder:
+        with use_plan(rung.plan):
+            eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                              prompt_granule=GRANULE, attn_impl="pallas")
+            assert _tokens(eng.generate(reqs)) == expected, f"rung dp{rung.dp}"

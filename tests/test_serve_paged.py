@@ -315,27 +315,88 @@ def test_shrink_streak_resets_on_drain():
 
 def test_prefill_honors_attn_impl(monkeypatch):
     """prefill_step used to hardcode the auto heuristic; a pinned
-    ``attn_impl='flash'`` must actually take the flash path (and agree with
-    dense numerically)."""
-    calls = []
-    orig = tf.attn_lib.flash_attention
+    ``attn_impl='flash'``/'pallas' must actually take that path (and agree
+    with dense numerically)."""
+    flash_calls, pallas_calls = [], []
+    orig_flash = tf.attn_lib.flash_attention
+    orig_pallas = tf.kernels_attn.flash_attention
 
-    def spy(*a, **kw):
-        calls.append(1)
-        return orig(*a, **kw)
-
-    monkeypatch.setattr(tf.attn_lib, "flash_attention", spy)
+    monkeypatch.setattr(tf.attn_lib, "flash_attention",
+                        lambda *a, **kw: (flash_calls.append(1), orig_flash(*a, **kw))[1])
+    monkeypatch.setattr(tf.kernels_attn, "flash_attention",
+                        lambda *a, **kw: (pallas_calls.append(1), orig_pallas(*a, **kw))[1])
     rng = np.random.default_rng(19)
     batch = {"tokens": jnp.asarray(
         rng.integers(1, CFG.vocab_size, size=(1, 128)).astype(np.int32))}
     out = {}
-    for impl in ("dense", "flash", "auto"):
+    for impl in ("dense", "flash", "auto", "pallas"):
         cfg = _cfg(attn_impl=impl, flash_q_block=64, flash_kv_block=64)
-        before = len(calls)
+        before_f, before_p = len(flash_calls), len(pallas_calls)
         logits, _ = tf.prefill_step(cfg, PARAMS, batch)
         out[impl] = np.asarray(logits)
-        flash_used = len(calls) > before
-        # auto picks dense at s=128 (<= 1024); pinned impls are obeyed
-        assert flash_used == (impl == "flash"), impl
+        # auto picks dense at s=128 (<= FLASH_THRESHOLD); pinned impls obeyed
+        assert (len(flash_calls) > before_f) == (impl == "flash"), impl
+        assert (len(pallas_calls) > before_p) == (impl == "pallas"), impl
     np.testing.assert_allclose(out["flash"], out["dense"], atol=2e-4, rtol=2e-5)
+    np.testing.assert_allclose(out["pallas"], out["dense"], atol=2e-4, rtol=2e-5)
     np.testing.assert_array_equal(out["auto"], out["dense"])
+
+
+def test_auto_threshold_unified_on_config_constant():
+    """Satellite: the auto fork reads ONE constant — choose_attention and
+    resolve_impl flip at the same configured threshold."""
+    from repro.configs.base import FLASH_THRESHOLD
+    from repro.models import attention as attn_lib
+
+    assert attn_lib.choose_attention(FLASH_THRESHOLD, FLASH_THRESHOLD) \
+        is not attn_lib.flash_attention  # at threshold: dense
+    assert attn_lib.choose_attention(FLASH_THRESHOLD + 1, 1) \
+        is attn_lib.flash_attention     # past it: flash
+    cfg = _cfg(flash_q_block=8)
+    assert attn_lib.resolve_impl(cfg, FLASH_THRESHOLD) == "dense"
+    assert attn_lib.resolve_impl(cfg, FLASH_THRESHOLD + 8) == "flash"
+    lowered = _cfg(flash_threshold=64, flash_q_block=8)
+    assert attn_lib.resolve_impl(lowered, 72) == "flash"
+    assert attn_lib.resolve_impl(lowered.replace(attn_impl="pallas"), 8) == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# PR 7: the Pallas kernel lane on the serving hot loop
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_engine_token_identity():
+    """attn_impl='pallas' — fused paged-decode attention + Pallas chunked
+    prefill — must be TOKEN-IDENTICAL to the re-prefill oracle and to the
+    XLA engine on the same workload (the lane is a drop-in, not an
+    approximation)."""
+    reqs = _reqs([20, 27, 12, 5], [8, 6, 8, 10], seed=23)
+    expected = [_oracle(CFG, PARAMS, r) for r in reqs]
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, prefill_chunk=8,
+                      attn_impl="pallas")
+    assert eng.cfg.attn_impl == "pallas"
+    assert _tokens(eng.generate(reqs)) == expected
+    xla = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, prefill_chunk=8)
+    assert _tokens(xla.generate(reqs)) == expected
+
+
+def test_pallas_engine_softcap_prefix_sharing():
+    """The fused lane under attention softcap AND copy-on-write prefix
+    sharing: same tokens as the XLA engine, and sharing still skips real
+    prefill work."""
+    cfg = _cfg(attn_softcap=30.0)
+    params = tf.init_params(cfg, jax.random.key(1))
+    reqs = _reqs([18, 18, 22], [6, 6, 5], seed=5, shared_prefix=16)
+    xla = ServeEngine(cfg, params, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, prefill_chunk=8)
+    want = _tokens(xla.generate(reqs))
+    eng = ServeEngine(cfg, params, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, prefill_chunk=8,
+                      attn_impl="pallas")
+    assert _tokens(eng.generate(reqs)) == want
+    # sharing accounting is lane-independent: the kernel lane skipped the
+    # same prefill work the XLA lane did
+    assert eng.stats.shared_prefill_hits == xla.stats.shared_prefill_hits
+    assert eng.stats.prefill_chunks == xla.stats.prefill_chunks
