@@ -20,6 +20,7 @@ import jax
 from repro.core import AdaptiveBatchController, make_policy
 from repro.data import sigmoid_synthetic
 from repro.models import small
+from repro.obs import Tracer
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
 
@@ -27,7 +28,7 @@ _DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json"
 
 
 def _train(method: str, *, n: int, d: int, m0: int, m_max: int, epochs: int,
-           estimator: str, seed: int = 0):
+           estimator: str, seed: int = 0, tracer=None):
     train, val, _ = sigmoid_synthetic(n=n, d=d, seed=seed)
     fns = ModelFns(
         batch_loss=small.mlp_batch_loss,
@@ -42,7 +43,7 @@ def _train(method: str, *, n: int, d: int, m0: int, m_max: int, epochs: int,
     t = Trainer(fns, small.mlp_init(jax.random.key(seed), d), sgd(momentum=0.9),
                 ctrl, train, val,
                 estimator=estimator if method == "divebatch" else "none",
-                seed=seed)
+                seed=seed, tracer=tracer)
     t0 = time.time()
     hist = t.run(epochs, verbose=False)
     wall = time.time() - t0
@@ -73,11 +74,22 @@ def run(smoke: bool = False, out_path: str | None = None):
         dict(n=8192, d=128, m0=64, m_max=1024, epochs=10)
     fixed = _train("sgd", estimator="none", **scale)
     adaptive = _train("divebatch", estimator="exact", **scale)
+    # same adaptive workload with a LIVE repro.obs tracer recording every
+    # dispatch/compile/observe span — the enabled-telemetry cost ceiling
+    # (the disabled-path cost, one branch per step, is pinned separately by
+    # the deterministic overhead guard in tests/test_obs.py)
+    traced = _train("divebatch", estimator="exact", tracer=Tracer(), **scale)
+    obs_overhead = (
+        adaptive["steps_per_sec"] / traced["steps_per_sec"]
+        if traced["steps_per_sec"] else 0.0
+    )
 
     record = {
         "workload": {"task": "synthetic-nonconvex-mlp", **scale, "smoke": smoke},
         "fixed": fixed,
         "adaptive": adaptive,
+        "traced": traced,
+        "obs_overhead": round(obs_overhead, 4),
     }
     path = os.path.abspath(out_path or _DEFAULT_OUT)
     with open(path, "w") as f:
@@ -97,6 +109,15 @@ def run(smoke: bool = False, out_path: str | None = None):
         f"adaptive_vs_fixed_steps_per_sec="
         f"{adaptive['steps_per_sec'] / max(fixed['steps_per_sec'], 1e-9):.3f};"
         f"recompiles={adaptive['compiles']};json={os.path.basename(path)}",
+    ))
+    # informational wall ratio (noisy on shared CI — the deterministic
+    # disabled-path guard lives in tests/test_obs.py); the loose bound only
+    # catches an enabled tracer going pathological
+    assert obs_overhead < 1.5, f"enabled tracer cost blew up: {obs_overhead:.3f}x"
+    rows.append((
+        "engine_obs_overhead", 0.0,
+        f"untraced_vs_traced_steps_per_sec={obs_overhead:.3f};"
+        f"traced_steps_per_sec={traced['steps_per_sec']}",
     ))
     return rows
 

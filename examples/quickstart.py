@@ -3,7 +3,10 @@
 Trains the paper's synthetic logistic-regression task with a ``repro.adapt``
 program (the composable, signal-driven adaptation API), shows the
 batch-size/diversity trajectory, checkpoints, kills the trainer, and
-resumes — the five core APIs in one file.
+resumes — the five core APIs in one file — with ``repro.obs`` telemetry on
+the whole way: one span trace (Perfetto-loadable ``trace.json``) and one
+typed JSONL run log span both trainers, and ``launch/monitor.py`` prints
+the reconstructed schedule at the end.
 
 The adaptation program replaces the old ``AdaptiveBatchController``, which
 survives only as a deprecated shim over exactly this object: policies
@@ -22,7 +25,9 @@ from repro.adapt import AdaptationProgram, DiveBatchPolicy, LrCoupling
 from repro.ckpt import CheckpointManager
 from repro.core import step_decay
 from repro.data import sigmoid_synthetic
+from repro.launch import monitor
 from repro.models import small
+from repro.obs import RunLog, Tracer
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
 
@@ -53,21 +58,29 @@ def main():
     # 2. the adaptation program (see make_program above)
     program = make_program()
 
-    # 3. train with checkpointing
+    # 3. telemetry: one tracer + one run log span the whole session
+    #    (equivalently: launch/train.py --trace DIR --runlog)
+    run_dir = tempfile.mkdtemp(prefix="divebatch_quickstart_run_")
+    tracer = Tracer()
+    runlog = RunLog(run_dir, meta={"cmd": "quickstart"})
+
+    # 4. train with checkpointing
     ckpt_dir = tempfile.mkdtemp(prefix="divebatch_quickstart_")
     trainer = Trainer(fns, params, sgd(momentum=0.9), program, train, val,
                       estimator="exact", ckpt=CheckpointManager(ckpt_dir),
-                      ckpt_every=2)
+                      ckpt_every=2, tracer=tracer, runlog=runlog)
     print("== training 6 epochs ==")
     trainer.run(6)
 
-    # 4. simulate a crash: rebuild everything, resume from the checkpoint
+    # 5. simulate a crash: rebuild everything, resume from the checkpoint
     #    (checkpoints carry the program state — schema v2; pre-redesign v1
-    #    controller checkpoints restore through the same path)
+    #    controller checkpoints restore through the same path).  The same
+    #    obs sinks carry over, so one trace/log covers both trainers.
     print("== 'crash' -> resume ==")
     trainer2 = Trainer(fns, small.logreg_init(jax.random.key(0), 128),
                        sgd(momentum=0.9), make_program(), train, val,
-                       estimator="exact", ckpt=CheckpointManager(ckpt_dir))
+                       estimator="exact", ckpt=CheckpointManager(ckpt_dir),
+                       tracer=tracer, runlog=runlog)
     trainer2.resume()
     trainer2.run(2)
 
@@ -80,6 +93,14 @@ def main():
     stats = trainer2.engine.stats  # the bucketed compile cache at work
     print(f"engine: {stats.compiles} step compiles for buckets {stats.buckets}, "
           f"{stats.bucket_hits} cache hits, donated={stats.donate}")
+
+    # 6. what the run log + trace captured (launch/monitor.py is the reader:
+    #    python -m repro.launch.monitor <run_dir> [--follow] [--trace OUT])
+    print("\n== telemetry (repro.obs) ==")
+    print("trace:", tracer.save(run_dir), f"({len(tracer.events)} events —"
+          " load it in Perfetto / chrome://tracing)")
+    runlog.close()
+    print(monitor.summary(monitor.load(run_dir)))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ import dataclasses
 
 from repro.adapt.combinators import LrCoupling
 from repro.adapt.signals import Clock, Signals
+from repro.obs import runlog as runlog_lib
+from repro.obs import trace as trace_lib
 
 #: checkpoint schema version written by state_dict
 SCHEMA_VERSION = 2
@@ -69,6 +71,16 @@ class AdaptationProgram:
         self.tick_every = int(tick_every)
         self.epoch = 0
         self.history: list[Applied] = []
+        # telemetry sinks (repro.obs); null defaults are strict no-ops
+        self.tracer = trace_lib.NULL
+        self.runlog = runlog_lib.NULL
+
+    def bind_obs(self, *, tracer=None, runlog=None) -> None:
+        """Attach telemetry sinks; ``None`` leaves a sink unchanged."""
+        if tracer is not None:
+            self.tracer = tracer
+        if runlog is not None:
+            self.runlog = runlog
 
     # -- views ---------------------------------------------------------------
     @property
@@ -93,7 +105,20 @@ class AdaptationProgram:
         boundary is an epoch end (epoch boundaries always advance the epoch
         counter, apply the background lr decay, and append to history — the
         legacy controller contract); silent ticks return None.
+
+        Every Applied record is also emitted to the bound run log as a
+        ``decision`` event — the run-log decision stream mirrors
+        ``self.history`` exactly, which is what lets ``launch/monitor.py``
+        reconstruct the batch-size/lr schedule from the file alone.
         """
+        with self.tracer.span("observe", boundary=clock.boundary,
+                              epoch=clock.epoch, step=clock.step):
+            applied = self._observe(signals, clock)
+        if applied is not None and self.runlog.enabled:
+            self.runlog.emit("decision", **dataclasses.asdict(applied))
+        return applied
+
+    def _observe(self, signals: Signals, clock: Clock) -> Applied | None:
         m_old = self.batch_size
         d = self.policy.observe(signals, clock)
         if d is not None:

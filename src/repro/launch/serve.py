@@ -26,6 +26,7 @@ from repro.configs import get_config
 from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
 from repro.models import transformer as tf
+from repro.obs import from_cli as obs_from_cli
 from repro.serve import Request, ServeEngine
 
 
@@ -96,6 +97,14 @@ def main():
                     help="MeshLadder over --dp (default: all) local devices; "
                          "the live slot count picks the rung")
     ap.add_argument("--out", default=None, help="write {results, stats} JSON")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record a Chrome/Perfetto trace (repro.obs) and "
+                         "write DIR/trace.json at exit")
+    ap.add_argument("--runlog", default=None, nargs="?", const="",
+                    metavar="PATH",
+                    help="write the schema-versioned JSONL run log "
+                         "(repro.obs.runlog; read it with launch/monitor.py); "
+                         "bare --runlog means <--trace DIR>/runlog.jsonl")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_size)
@@ -117,6 +126,11 @@ def main():
         mesh = jax.make_mesh((args.dp,), ("data",))
         plan_ctx = use_plan(ShardingPlan(mesh=mesh, tp=None))
 
+    tracer, runlog = obs_from_cli(
+        args.trace, args.runlog,
+        meta={"cmd": "serve", "arch": args.arch, "requests": args.requests,
+              "seed": args.seed, "elastic": bool(args.elastic)},
+    )
     with plan_ctx:
         engine = ServeEngine(
             cfg, params, max_slots=args.max_slots, max_seq=args.max_seq,
@@ -127,10 +141,17 @@ def main():
             pool_blocks=args.pool_blocks or None,
             prefill_chunk=args.prefill_chunk,
             prefix_sharing=not args.no_prefix_sharing,
+            tracer=tracer,
+            runlog=runlog,
         )
         requests = build_requests(cfg, args.requests,
                                   max_new=args.max_new, seed=args.seed)
         results = serve_trace(engine, requests, args.ramp)
+    if tracer is not None:
+        print(f"trace: {tracer.save(args.trace)}")
+    if runlog is not None:
+        runlog.close()
+        print(f"runlog: {runlog.path}")
 
     stats = engine.stats
     total = sum(r.steps for r in results)

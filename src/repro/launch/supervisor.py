@@ -68,10 +68,17 @@ class Watchdog:
 
 
 def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
-                   ckpt_dir: str, max_restarts: int = 10) -> list:
+                   ckpt_dir: str, max_restarts: int = 10,
+                   tracer=None, runlog=None) -> list:
     """``make_trainer(ckpt_manager)`` builds a fresh Trainer bound to the
     checkpoint directory. Failures are injected at the given epochs; each
-    crash is answered with a rebuild + resume. Returns the final history."""
+    crash is answered with a rebuild + resume. Returns the final history.
+
+    ``tracer``/``runlog`` (repro.obs) are rebound onto every rebuilt Trainer
+    and each (re)start is emitted as a typed ``restart`` event — one trace
+    and one run log span the whole supervised run, so a cross-rung restart
+    is reconstructable from the single file (restarts=0 marks the initial
+    start)."""
     from repro.ckpt import CheckpointManager
 
     restarts = 0
@@ -79,8 +86,15 @@ def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
     while True:
         mgr = CheckpointManager(ckpt_dir, keep=3)
         trainer = make_trainer(mgr)
+        if tracer is not None or runlog is not None:
+            trainer.bind_obs(tracer=tracer, runlog=runlog)
         trainer.resume()
         rung = getattr(trainer, "rung", None)
+        if runlog is not None and runlog.enabled:
+            runlog.emit("restart", restarts=restarts,
+                        epoch=trainer.cursor.epoch,
+                        batch_size=trainer.adapt.batch_size,
+                        rung=rung.index if rung is not None else None)
         if rung is not None:
             # elastic restart: the checkpoint's batch size picked the rung,
             # which after a mid-run failure is NOT the ladder's first one
@@ -121,6 +135,14 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N CPU host devices (before first jax use; "
                          "--elastic defaults to 8 so the ladder has rungs)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record a Chrome/Perfetto trace (repro.obs) spanning "
+                         "every restart; writes DIR/trace.json at exit")
+    ap.add_argument("--runlog", default=None, nargs="?", const="",
+                    metavar="PATH",
+                    help="write the schema-versioned JSONL run log, restarts "
+                         "included; bare --runlog means <--trace "
+                         "DIR>/runlog.jsonl")
     args = ap.parse_args()
 
     ndev = args.devices or (8 if args.elastic else 0)
@@ -172,7 +194,20 @@ def main():
             elastic=MeshLadder(granule=16) if args.elastic else None,
         )
 
-    history = run_supervised(make_trainer, args.epochs, args.fail_at, args.ckpt_dir)
+    from repro.obs import from_cli as obs_from_cli
+
+    tracer, runlog = obs_from_cli(
+        args.trace, args.runlog,
+        meta={"cmd": "supervisor", "method": args.method,
+              "elastic": bool(args.elastic), "fail_at": args.fail_at},
+    )
+    history = run_supervised(make_trainer, args.epochs, args.fail_at,
+                             args.ckpt_dir, tracer=tracer, runlog=runlog)
+    if tracer is not None:
+        print(f"trace: {tracer.save(args.trace)}")
+    if runlog is not None:
+        runlog.close()
+        print(f"runlog: {runlog.path}")
     print(f"completed {len(history)} epochs across restarts; "
           f"final val acc {history[-1].val_metrics.get('acc'):.4f}")
 

@@ -37,6 +37,7 @@ from repro.core import step_decay
 from repro.data import imagelike_classification, sigmoid_synthetic
 from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
+from repro.obs import from_cli as obs_from_cli
 from repro.optim import sgd
 from repro.train.loop import ModelFns, Trainer
 from repro.ckpt import CheckpointManager
@@ -159,6 +160,14 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write run JSON here: {'history': [epoch records], "
                          "'engine': EngineStats}")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record a Chrome/Perfetto trace (repro.obs) and "
+                         "write DIR/trace.json at exit")
+    ap.add_argument("--runlog", default=None, nargs="?", const="",
+                    metavar="PATH",
+                    help="write the schema-versioned JSONL run log "
+                         "(repro.obs.runlog; read it with launch/monitor.py); "
+                         "bare --runlog means <--trace DIR>/runlog.jsonl")
     args = ap.parse_args()
 
     if args.method == "oracle":
@@ -184,6 +193,12 @@ def main():
         mesh = jax.make_mesh((args.dp,), ("data",))
         plan_ctx = use_plan(ShardingPlan(mesh=mesh))
 
+    tracer, runlog = obs_from_cli(
+        args.trace, args.runlog,
+        meta={"cmd": "train", "task": args.task, "method": args.method,
+              "estimator": args.estimator, "seed": args.seed,
+              "elastic": bool(args.elastic)},
+    )
     with plan_ctx:
         fns, params, train, val = build_task(args.task, args.seed)
         program = make_program(args, len(train))
@@ -196,11 +211,18 @@ def main():
             ckpt_every=args.ckpt_every,
             donate=not args.no_donate,
             elastic=ladder,
+            tracer=tracer,
+            runlog=runlog,
         )
         if args.resume and trainer.ckpt:
             trainer.resume()
         remaining = args.epochs - trainer.cursor.epoch
         history = trainer.run(max(remaining, 0))
+    if tracer is not None:
+        print(f"trace: {tracer.save(args.trace)}")
+    if runlog is not None:
+        runlog.close()
+        print(f"runlog: {runlog.path}")
     stats = trainer.engine.stats
     if args.out:
         import dataclasses

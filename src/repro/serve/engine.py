@@ -71,6 +71,9 @@ from repro.dist.plan import current_plan
 from repro.dist.sharding import cache_pspecs, shardings_of
 from repro.elastic import MeshLadder, place
 from repro.models import transformer as tf
+from repro.obs import metrics as metrics_lib
+from repro.obs import runlog as runlog_lib
+from repro.obs import trace as trace_lib
 from repro.serve.blocks import BlockPool, chain_keys
 from repro.serve.scheduler import Admission, Request, Result, Scheduler
 
@@ -147,8 +150,7 @@ class _PrefillJob:
     stepped: bool = False
 
 
-@dataclasses.dataclass
-class ServeStats:
+class ServeStats(metrics_lib.StatsView):
     """Observable serving behaviour (mirrors ``train.engine.EngineStats``).
 
     ``compiles`` counts decode-step compilations — one per distinct
@@ -168,36 +170,46 @@ class ServeStats:
     replaced the dense ``max_slots * max_seq`` preallocation.
     ``tokens_per_sec`` is the windowed rate (``adapt.signals
     .ThroughputWindow``), not a run-global average.
+
+    Like ``EngineStats``, the scalar fields are emitting views over the
+    ``repro.obs.metrics`` registry under a fresh ``serve.engine.<n>``
+    namespace; the attribute surface and ``as_dict()`` are unchanged.
     """
 
-    compiles: int = 0
-    bucket_hits: int = 0
-    bucket_misses: int = 0
-    prefill_compiles: int = 0
-    aux_compiles: int = 0
-    steps: int = 0
-    slot_steps: int = 0
-    tokens: int = 0
-    prefills: int = 0
-    prefill_chunks: int = 0
-    shared_prefill_hits: int = 0
-    shared_blocks: int = 0
-    cow_copies: int = 0
-    pool_blocks: int = 0
-    peak_blocks: int = 0
-    block_size: int = 0
-    retired: int = 0
-    reshards: int = 0
-    resizes: int = 0
-    compile_s: float = 0.0
-    dispatch_wall_s: float = 0.0
-    tokens_per_sec: float = 0.0
-    donate: bool = True
-    buckets: list[int] = dataclasses.field(default_factory=list)
-    rungs: list = dataclasses.field(default_factory=list)
+    _COUNTERS = (
+        "compiles", "bucket_hits", "bucket_misses", "prefill_compiles",
+        "aux_compiles", "steps", "slot_steps", "tokens", "prefills",
+        "prefill_chunks", "shared_prefill_hits", "shared_blocks",
+        "reshards", "resizes",
+    )
+    _GAUGES = (
+        "cow_copies", "pool_blocks", "peak_blocks", "block_size",
+        "retired", "compile_s", "dispatch_wall_s", "tokens_per_sec",
+    )
+
+    def __init__(self, donate: bool = True, pool_blocks: int = 0,
+                 block_size: int = 0, *,
+                 registry: metrics_lib.Registry | None = None):
+        self.donate = donate
+        self.buckets: list[int] = []
+        self.rungs: list = []
+        self._init_metrics("serve.engine", registry)
+        self.pool_blocks = pool_blocks
+        self.block_size = block_size
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = {f: getattr(self, f) for f in (
+            "compiles", "bucket_hits", "bucket_misses", "prefill_compiles",
+            "aux_compiles", "steps", "slot_steps", "tokens", "prefills",
+            "prefill_chunks", "shared_prefill_hits", "shared_blocks",
+            "cow_copies", "pool_blocks", "peak_blocks", "block_size",
+            "retired", "reshards", "resizes", "compile_s",
+            "dispatch_wall_s", "tokens_per_sec",
+        )}
+        d["donate"] = self.donate
+        d["buckets"] = list(self.buckets)
+        d["rungs"] = list(self.rungs)
+        return d
 
 
 class ServeEngine:
@@ -228,6 +240,9 @@ class ServeEngine:
         prefill_chunk: int = 0,
         prefix_sharing: bool = True,
         attn_impl: str | None = None,
+        tracer=None,
+        runlog=None,
+        obs_window: int = 16,
     ):
         if sampler not in SAMPLERS:
             raise ValueError(f"sampler must be one of {SAMPLERS}, got {sampler!r}")
@@ -307,6 +322,13 @@ class ServeEngine:
             block_size=self.block_size,
         )
         self._thru = ThroughputWindow()
+        # telemetry sinks (repro.obs); the pool shares the engine's tracer so
+        # alloc/evict instants land on the same timeline as decode spans
+        self.tracer = tracer if tracer is not None else trace_lib.NULL
+        self.runlog = runlog if runlog is not None else runlog_lib.NULL
+        self.pool.tracer = self.tracer
+        #: emit a ``serve_window`` run-log event every this many decode steps
+        self.obs_window = int(obs_window)
 
     # -- plumbing ------------------------------------------------------------
     @property
@@ -415,8 +437,14 @@ class ServeEngine:
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable"
             )
-            exe = jax.jit(fn, **kwargs).lower(*args).compile()
-        self.stats.compile_s += time.perf_counter() - t0
+            with self.tracer.span("compile", scope="serve", kind=kind,
+                                  key=str(key)):
+                exe = jax.jit(fn, **kwargs).lower(*args).compile()
+        dt = time.perf_counter() - t0
+        if self.runlog.enabled:
+            self.runlog.emit("compile", scope="serve", what=str(key),
+                             seconds=dt, exe_kind=kind, rung=self._rung_token)
+        self.stats.compile_s += dt
         if kind == "decode":
             self.stats.compiles += 1
             self.stats.buckets.append(self._bucket)
@@ -438,15 +466,22 @@ class ServeEngine:
         rung = self._elastic.rung_for_batch(max(self._bucket, 1))
         if rung.index == self._rung.index:
             return
-        self._rung = rung
-        self.params = place(self.params, rung.plan)
-        if self._cache is not None:
-            self._cache = self._place_cache(self._cache)
-        self._pages = self._place_cache(self._pages)
-        for job in self._jobs:
-            job.row = self._place_cache(job.row)
-        for ent in self._prompt_cache.values():
-            ent["row"] = self._place_cache(ent["row"])
+        src = self._rung
+        with self.tracer.span("reshard", scope="serve", src=src.index,
+                              dst=rung.index, dp=rung.dp):
+            self._rung = rung
+            self.params = place(self.params, rung.plan)
+            if self._cache is not None:
+                self._cache = self._place_cache(self._cache)
+            self._pages = self._place_cache(self._pages)
+            for job in self._jobs:
+                job.row = self._place_cache(job.row)
+            for ent in self._prompt_cache.values():
+                ent["row"] = self._place_cache(ent["row"])
+        if self.runlog.enabled:
+            self.runlog.emit("reshard", scope="serve", src=src.index,
+                             dst=rung.index, dp=rung.dp,
+                             step=self.stats.steps)
         self.stats.reshards += 1
 
     def _resize(self, target: int) -> None:
@@ -567,13 +602,19 @@ class ServeEngine:
         job."""
         bs = self._req_blocks[adm.rid]
         ent, bs.ent = bs.ent, None
-        if ent is not None:
-            self._admit_shared(adm, bs, ent)
-        else:
-            self._jobs.append(_PrefillJob(
-                rid=adm.rid, off=bs.shared * self.block_size,
-                row=self._fresh_row(bs.shared * self.block_size),
-            ))
+        if self.runlog.enabled:
+            self.runlog.emit("serve_admit", rid=adm.rid, prompt_len=bs.plen,
+                             budget=bs.budget, shared=bs.shared,
+                             full_hit=ent is not None)
+        with self.tracer.span("admit", rid=adm.rid, prompt_len=bs.plen,
+                              shared=bs.shared):
+            if ent is not None:
+                self._admit_shared(adm, bs, ent)
+            else:
+                self._jobs.append(_PrefillJob(
+                    rid=adm.rid, off=bs.shared * self.block_size,
+                    row=self._fresh_row(bs.shared * self.block_size),
+                ))
 
     def _fresh_row(self, off: int) -> PyTree:
         """Zeroed per-request prefill carry, starting at position ``off``
@@ -651,7 +692,13 @@ class ServeEngine:
             ),
             kind="prefill",
         )
-        tok, logits, job.row, self._pages = exe(*args)
+        tr = self.tracer
+        if tr.enabled:
+            with tr.span("prefill_chunk", rid=job.rid, off=job.off, chunk=c,
+                         rung=self._rung_token):
+                tok, logits, job.row, self._pages = exe(*args)
+        else:
+            tok, logits, job.row, self._pages = exe(*args)
         job.off += c
         self.stats.prefill_chunks += 1
         if job.off == bs.plen:
@@ -716,6 +763,9 @@ class ServeEngine:
         if bs.reserved:
             self.pool.unreserve(bs.reserved)
             bs.reserved = 0
+        if self.runlog.enabled:
+            self.runlog.emit("serve_retire", rid=rid, pos=bs.pos,
+                             live_blocks=self.pool.live)
         self.stats.peak_blocks = self.pool.peak_live
         self.stats.cow_copies = self.pool.cow_copies
 
@@ -788,10 +838,20 @@ class ServeEngine:
             ),
             kind="decode",
         )
+        tr = self.tracer
         t0 = time.perf_counter()
-        nxt, self._cache, self._pages = exe(
-            self.params, self._cache, self._pages, tables, toks, rids
-        )
+        # disabled path: one attribute load + branch, no extra transfers
+        # (the per-step (B,) token read below predates the tracer)
+        if tr.enabled:
+            with tr.span("decode", bucket=self._bucket, rung=self._rung_token,
+                         live=len(running), step_num=self.stats.steps):
+                nxt, self._cache, self._pages = exe(
+                    self.params, self._cache, self._pages, tables, toks, rids
+                )
+        else:
+            nxt, self._cache, self._pages = exe(
+                self.params, self._cache, self._pages, tables, toks, rids
+            )
         self.stats.dispatch_wall_s += time.perf_counter() - t0
         nxt = np.asarray(nxt)  # the per-step host transfer: one (B,) vector
         self.stats.steps += 1
@@ -802,6 +862,14 @@ class ServeEngine:
                 self._release(rid)
         self._count_token(len(running))
         self.stats.retired = sch.retired
+        if (self.runlog.enabled and self.obs_window
+                and self.stats.steps % self.obs_window == 0):
+            self.runlog.emit(
+                "serve_window", step=self.stats.steps, tokens=self.stats.tokens,
+                tokens_per_sec=self.stats.tokens_per_sec, live=len(running),
+                live_blocks=self.pool.live, bucket=self._bucket,
+                rung=self._rung_token,
+            )
         return True
 
     def drain(self) -> None:

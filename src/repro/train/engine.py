@@ -35,6 +35,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as metrics_lib
+from repro.obs import runlog as runlog_lib
+from repro.obs import trace as trace_lib
 from repro.optim import Optimizer
 from repro.train import step as step_lib
 from repro.train.state import TrainState
@@ -71,8 +74,7 @@ def eval_fn_for(fns: ModelFns) -> Callable:
     return eval_fn
 
 
-@dataclasses.dataclass
-class EngineStats:
+class EngineStats(metrics_lib.StatsView):
     """Observable engine behaviour (consumed by benchmarks/ and tests).
 
     ``compiles`` counts *step* compilations — one per distinct (bucket, rung,
@@ -85,41 +87,59 @@ class EngineStats:
     ``buckets`` lists the bucket key of each compile in order (a key repeats
     only if the batch schema, rung, or tier changed within a bucket);
     ``reshards`` counts rung transitions applied to the engine-owned state.
+
+    The scalar fields are emitting views over the ``repro.obs.metrics``
+    registry: each instance claims a fresh ``train.engine.<n>`` namespace and
+    ``REGISTRY.snapshot()`` sees every engine in the process; the legacy
+    attribute surface (``stats.compiles += 1``, ``as_dict()``) is unchanged
+    (the equivalence test in tests/test_obs.py pins both).
     """
 
-    compiles: int = 0
-    bucket_hits: int = 0
-    bucket_misses: int = 0
-    steps: int = 0
-    compile_s: float = 0.0
-    reshards: int = 0
-    # Time spent *dispatching* steps. jax execution is async: the engine does
-    # not block on results (callers decide when to read), so this is NOT
-    # end-to-end throughput — benchmarks measure that with their own wall
-    # clock around a blocking loop (benchmarks/bench_engine.py).
-    dispatch_wall_s: float = 0.0
-    donate: bool = True
-    buckets: list[int] = dataclasses.field(default_factory=list)
-    # the rung token active at each compile, parallel to ``buckets`` (all
-    # None outside elastic mode). Distinct (bucket, rung) pairs bound the
-    # compile count: num_buckets x num_rungs worst case, and exactly one per
-    # bucket when the rung is a pure function of the bucket (a MeshLadder
-    # driven by the same granule as the batch policy).
-    rungs: list = dataclasses.field(default_factory=list)
-    # the estimator-tier token active at each compile, parallel to
-    # ``buckets`` (None for engines whose build is not tier-parameterised).
-    # A Decision.estimator flip is a new cache key, not an engine rebuild:
-    # flipping back onto an already-compiled (bucket, rung, tier) is a hit.
-    tiers: list = dataclasses.field(default_factory=list)
+    _COUNTERS = ("compiles", "bucket_hits", "bucket_misses", "steps", "reshards")
+    # Time spent *dispatching* steps (``dispatch_wall_s``). jax execution is
+    # async: the engine does not block on results (callers decide when to
+    # read), so this is NOT end-to-end throughput — benchmarks measure that
+    # with their own wall clock around a blocking loop
+    # (benchmarks/bench_engine.py).
+    _GAUGES = ("compile_s", "dispatch_wall_s")
+
+    def __init__(self, donate: bool = True, *,
+                 registry: metrics_lib.Registry | None = None):
+        self.donate = donate
+        #: the bucket key of each compile, in order
+        self.buckets: list[int] = []
+        # the rung token active at each compile, parallel to ``buckets`` (all
+        # None outside elastic mode). Distinct (bucket, rung) pairs bound the
+        # compile count: num_buckets x num_rungs worst case, and exactly one
+        # per bucket when the rung is a pure function of the bucket (a
+        # MeshLadder driven by the same granule as the batch policy).
+        self.rungs: list = []
+        # the estimator-tier token active at each compile, parallel to
+        # ``buckets`` (None for engines whose build is not tier-parameterised).
+        # A Decision.estimator flip is a new cache key, not an engine rebuild:
+        # flipping back onto an already-compiled (bucket, rung, tier) is a hit.
+        self.tiers: list = []
+        self._init_metrics("train.engine", registry)
 
     @property
     def dispatch_steps_per_sec(self) -> float:
         return self.steps / self.dispatch_wall_s if self.dispatch_wall_s > 0 else 0.0
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["dispatch_steps_per_sec"] = self.dispatch_steps_per_sec
-        return d
+        return {
+            "compiles": self.compiles,
+            "bucket_hits": self.bucket_hits,
+            "bucket_misses": self.bucket_misses,
+            "steps": self.steps,
+            "compile_s": self.compile_s,
+            "reshards": self.reshards,
+            "dispatch_wall_s": self.dispatch_wall_s,
+            "donate": self.donate,
+            "buckets": list(self.buckets),
+            "rungs": list(self.rungs),
+            "tiers": list(self.tiers),
+            "dispatch_steps_per_sec": self.dispatch_steps_per_sec,
+        }
 
 
 class StepEngine:
@@ -145,8 +165,14 @@ class StepEngine:
         in_shardings=None,
         out_shardings=None,
         eval_fn: Callable | None = None,
+        tracer=None,
+        runlog=None,
     ):
         self._build = build_step
+        # telemetry sinks (repro.obs); the null defaults make every emit a
+        # strict no-op, and hot paths additionally guard on .enabled
+        self.tracer = tracer if tracer is not None else trace_lib.NULL
+        self.runlog = runlog if runlog is not None else runlog_lib.NULL
         try:
             sig_params = inspect.signature(build_step).parameters.values()
             # only genuinely positional parameters count — a (key, **opts)
@@ -226,8 +252,15 @@ class StepEngine:
         t0 = time.perf_counter()
         # AOT-compile so the compile count/time is exact, not inferred from
         # jit retrace behaviour.
-        compiled = self.jitted(key).lower(state, batch, lr).compile()
-        self.stats.compile_s += time.perf_counter() - t0
+        with self.tracer.span("compile", scope="train", bucket=key,
+                              rung=self.rung, tier=str(self.tier)):
+            compiled = self.jitted(key).lower(state, batch, lr).compile()
+        dt = time.perf_counter() - t0
+        if self.runlog.enabled:
+            self.runlog.emit("compile", scope="train", what=f"bucket={key}",
+                             seconds=dt, bucket=key, rung=self.rung,
+                             tier=str(self.tier))
+        self.stats.compile_s += dt
         self.stats.compiles += 1
         self.stats.buckets.append(key)
         self.stats.rungs.append(self.rung)
@@ -247,8 +280,17 @@ class StepEngine:
         key = self._bucket_of(batch)
         lr = jnp.asarray(lr, jnp.float32)
         fn = self._executable(key, state, batch, lr)
+        tr = self.tracer
         t0 = time.perf_counter()
-        out = fn(state, batch, lr)
+        # the disabled path is one attribute load + branch (overhead guard
+        # in tests/test_obs.py pins it): no span object, no clock beyond the
+        # pre-existing dispatch_wall_s pair, no host transfer
+        if tr.enabled:
+            with tr.span("dispatch", bucket=key, rung=self.rung,
+                         tier=str(self.tier), step_num=self.stats.steps):
+                out = fn(state, batch, lr)
+        else:
+            out = fn(state, batch, lr)
         self.stats.dispatch_wall_s += time.perf_counter() - t0
         self.stats.steps += 1
         return out

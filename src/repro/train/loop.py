@@ -70,6 +70,8 @@ from repro.data.pipeline import (
 )
 from repro.dist.plan import current_plan
 from repro.elastic import MeshLadder, place, reshard
+from repro.obs import runlog as runlog_lib
+from repro.obs import trace as trace_lib
 from repro.train.engine import ModelFns, StepEngine, eval_fn_for
 from repro.train.state import TrainState, init_state
 from repro.utils.logging import get_logger
@@ -114,8 +116,14 @@ class Trainer:
         engine: StepEngine | None = None,
         elastic: MeshLadder | None = None,
         prefetch: bool | str = True,
+        tracer=None,
+        runlog=None,
     ):
         self.fns = fns
+        # telemetry sinks (repro.obs); rebound for real at the end of init
+        # via bind_obs once the engine/program exist
+        self._tracer = trace_lib.NULL
+        self._runlog = runlog_lib.NULL
         self.optimizer = optimizer
         self.controller = controller  # legacy view; may BE the program
         self.adapt = (
@@ -158,6 +166,7 @@ class Trainer:
         self.engine = engine or self._build_engine(donate)
         # an injected engine may lack an eval fn; the Trainer owns the fns
         self.engine.ensure_eval_fn(eval_fn_for(fns))
+        self.bind_obs(tracer=tracer, runlog=runlog)
         if self._elastic is not None:
             # initial placement: the rung for the starting batch size
             self._ensure_rung(self.adapt.batch_size)
@@ -198,12 +207,31 @@ class Trainer:
         drives the run, else the ambient dist plan (None single-device)."""
         return self._rung.plan if self._rung is not None else self._plan
 
+    def bind_obs(self, *, tracer=None, runlog=None) -> None:
+        """Attach telemetry sinks (``repro.obs``) to the trainer, its engine,
+        and its adaptation program.  ``None`` leaves a sink unchanged — the
+        supervisor rebinds the same sinks onto every rebuilt Trainer so one
+        trace/run log spans restarts."""
+        if tracer is not None:
+            self._tracer = tracer
+            self.engine.tracer = tracer
+        if runlog is not None:
+            self._runlog = runlog
+            self.engine.runlog = runlog
+        bind = getattr(self.adapt, "bind_obs", None)
+        if bind is not None:
+            bind(tracer=tracer, runlog=runlog)
+
     def inject_event(self, name: str) -> None:
         """Queue an external event (e.g. a supervisor Watchdog straggler
         flag).  Consumed BETWEEN steps at the next opportunity: the adapt
         program observes it with ``boundary='event'`` and may resize /
         reshard / retune before the following step."""
         self._events.append(str(name))
+        if self._runlog.enabled:
+            self._runlog.emit("inject", name=str(name),
+                              epoch=self.cursor.epoch,
+                              step=self.engine.stats.steps)
 
     def _ensure_rung(self, batch_size: int) -> None:
         """Elastic transition: move the state onto the ladder rung for
@@ -221,14 +249,23 @@ class Trainer:
         src = self._rung
         # the initial placement must NOT donate: the state still aliases the
         # caller-passed params at that point (transitions own their buffers)
-        self.state = reshard(
-            self.state, src.plan if src else None, rung.plan,
-            donate=self.engine.donate and src is not None,
-        )
+        with self._tracer.span("reshard", scope="train",
+                               src=src.index if src else None,
+                               dst=rung.index, dp=rung.dp):
+            self.state = reshard(
+                self.state, src.plan if src else None, rung.plan,
+                donate=self.engine.donate and src is not None,
+            )
         self._rung = rung
         self.engine.rung = rung.index
         if src is not None:  # initial placement is not a transition
             self.engine.stats.reshards += 1
+            if self._runlog.enabled:
+                self._runlog.emit("reshard", scope="train", src=src.index,
+                                  dst=rung.index, dp=rung.dp,
+                                  epoch=self.cursor.epoch,
+                                  step=self.engine.stats.steps,
+                                  note=note)
             log.info("elastic: rung %d -> %d (dp %d -> %d) %s",
                      src.index, rung.index, src.dp, rung.dp, note)
 
@@ -370,6 +407,13 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def run_epoch(self) -> EpochRecord:
+        tr = self._tracer
+        if not tr.enabled:
+            return self._run_epoch()
+        with tr.span("epoch", epoch=self.cursor.epoch):
+            return self._run_epoch()
+
+    def _run_epoch(self) -> EpochRecord:
         t0 = time.time()
         prog = self.adapt
         bsz = prog.batch_size
@@ -470,6 +514,15 @@ class Trainer:
             wall_s=time.time() - t0,
         )
         self.history.append(rec)
+        if self._runlog.enabled:
+            self._runlog.emit(
+                "epoch", epoch=rec.epoch, steps=rec.steps,
+                batch_size=rec.batch_size, lr=rec.lr, loss=rec.train_loss,
+                val_loss=rec.val_loss, diversity=rec.diversity,
+                gns=sig.gns, throughput=sig.throughput,
+                rung=self._rung.index if self._rung is not None else None,
+                wall_s=rec.wall_s,
+            )
         self.cursor.epoch += 1
         self.cursor.batch_index = 0
         self.cursor.sample_index = 0
@@ -506,6 +559,9 @@ class Trainer:
                 "step": int(self.state.step),
             },
         )
+        if self._runlog.enabled:
+            self._runlog.emit("checkpoint", epoch=self.cursor.epoch,
+                              step=int(self.state.step))
 
     def resume(self) -> bool:
         assert self.ckpt is not None

@@ -15,12 +15,16 @@ def test_bench_engine_smoke(tmp_path):
     rows = bench_engine.run(smoke=True, out_path=str(out))
     record = json.loads(out.read_text())
     assert record["workload"]["smoke"] is True
-    for kind in ("fixed", "adaptive"):
+    for kind in ("fixed", "adaptive", "traced"):
         r = record[kind]
         assert r["steps_per_sec"] > 0
         assert r["compiles"] <= r["compile_bound"]
         assert r["donated"] is True
     # fixed batch compiles exactly one bucket
     assert record["fixed"]["compiles"] == 1
+    # the obs A/B row rides along (tests/test_obs.py pins the disabled-path
+    # cost deterministically; this is the enabled-tracer wall ratio)
+    assert record["obs_overhead"] > 0
     names = [name for name, _, _ in rows]
     assert "engine_fixed_batch" in names and "engine_adaptive_batch" in names
+    assert "engine_obs_overhead" in names

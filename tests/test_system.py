@@ -180,6 +180,65 @@ class TestSupervisor:
             [h.val_loss for h in hist], [h.val_loss for h in clean], rtol=1e-5
         )
 
+    def test_runlog_reconstructs_cross_rung_restart(self, tmp_path):
+        """repro.obs regression: one run log spans the whole supervised run
+        (it outlives every Trainer rebuild), so the cross-rung restart — and
+        a Watchdog straggler flag routed through ``Trainer.inject_event`` —
+        are reconstructable from the single JSONL file afterwards."""
+        from repro.elastic import MeshLadder
+        from repro.launch import monitor
+        from repro.launch.supervisor import Watchdog, run_supervised
+        from repro.obs import RunLog, read_runlog
+
+        train, val, _ = sigmoid_synthetic(n=1000, d=16, seed=0)
+
+        def make_trainer(mgr):
+            ctrl = AdaptiveBatchController(
+                make_policy("divebatch", m0=16, m_max=256, delta=0.5,
+                            dataset_size=len(train), granule=16),
+                base_lr=1.0,
+            )
+            return Trainer(
+                ModelFns(small.logreg_batch_loss, small.logreg_loss,
+                         lambda p, b: {"acc": small.logreg_accuracy(p, b)}),
+                small.logreg_init(jax.random.key(0), 16), sgd(momentum=0.9),
+                ctrl, train, val, estimator="exact", ckpt=mgr,
+                elastic=MeshLadder(granule=16),
+            )
+
+        run_dir = tmp_path / "run"
+        with RunLog(str(run_dir), meta={"cmd": "supervised"}) as log:
+            hist = run_supervised(make_trainer, total_epochs=5, fail_at=[3],
+                                  ckpt_dir=str(tmp_path / "sup"), runlog=log)
+            # the Watchdog straggler path feeds the same log via inject_event
+            t = make_trainer(CheckpointManager(str(tmp_path / "sup")))
+            t.bind_obs(runlog=log)
+            wd = Watchdog(window=10, z_thresh=4.0,
+                          on_flag=lambda step, z: t.inject_event("straggler"))
+            for i, dt in enumerate([0.01] * 8 + [1.0]):
+                wd.observe(i, dt)
+            assert wd.flagged
+
+        assert len(hist) == 5
+        evs = read_runlog(str(run_dir))
+        restarts = [e for e in evs if e["kind"] == "restart"]
+        # initial start (restarts=0) + the rebuild after the epoch-3 crash,
+        # which resumes at a LATER epoch, a GROWN batch, and a WIDER rung
+        assert [e["restarts"] for e in restarts] == [0, 1]
+        assert restarts[1]["epoch"] > restarts[0]["epoch"] == 0
+        assert restarts[1]["batch_size"] > restarts[0]["batch_size"]
+        assert restarts[1]["rung"] > restarts[0]["rung"]
+        # the schedule rows after the restart execute on the restart's rung
+        sched = monitor.schedule(evs)
+        post = [r for r in sched if r["epoch"] >= restarts[1]["epoch"]]
+        assert post and all(r["rung"] is not None for r in post)
+        # the injected Watchdog flag is a typed event in the same file
+        inj = [e for e in evs if e["kind"] == "inject"]
+        assert [e["name"] for e in inj] == ["straggler"]
+        # lifecycle rendering covers both
+        text = monitor.summary(evs)
+        assert "restart #1" in text and "inject    'straggler'" in text
+
 
 class TestServing:
     def test_greedy_decode_deterministic(self):
