@@ -13,6 +13,7 @@ deprecated shim over an ``AdaptationProgram``.
 """
 
 from repro.adapt.combinators import (
+    BoundedRung,
     Chain,
     Clamped,
     Hysteresis,
@@ -55,6 +56,7 @@ __all__ = [
     "GradNoisePolicy",
     "LrCoupling",
     "Clamped",
+    "BoundedRung",
     "Warmup",
     "Hysteresis",
     "Chain",

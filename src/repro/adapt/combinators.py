@@ -24,6 +24,7 @@ from repro.core.controller import lr_rescale, step_decay  # canonical defs
 __all__ = [
     "LrCoupling",
     "Clamped",
+    "BoundedRung",
     "Warmup",
     "Hysteresis",
     "Chain",
@@ -129,6 +130,72 @@ class Clamped(_Wrapper):
         if m != d.batch_size:
             self.inner.set_batch_size(m)
             d = dataclasses.replace(d, batch_size=m, reason=d.reason + "+clamp")
+        return d
+
+
+class BoundedRung(_Wrapper):
+    """Clamp decisions under the gradient-diversity batch bound.
+
+    Yin et al. ("Gradient Diversity: a Key Ingredient for Scalable
+    Distributed Learning") prove mini-batch SGD matches serial SGD's
+    convergence only while the batch stays below ``n * Delta_S`` — gradient
+    diversity IS the theory of how wide a data-parallel rung may grow.
+    ``Signals.diversity_bound`` carries the windowed estimate of that cap
+    (``samples * Delta_hat``, decoded off the same stacked-scalar read as
+    ``gns``); this combinator enforces it on every inner ``Decision``:
+
+      * ``batch_size`` is clamped onto the largest lattice point
+        ``granule * 2^k <= margin * bound`` (floored at ``granule`` —
+        training must proceed even under a collapsed estimate);
+      * an explicit ``rung`` whose dp width exceeds the cap is substituted
+        with the widest ladder rung that fits (when ``ladder`` is given).
+
+    A missing / non-finite / non-positive bound passes decisions through
+    untouched (e.g. the very first boundary, before any accumulation).
+    """
+
+    def __init__(self, inner, *, granule: int = 1, margin: float = 1.0,
+                 ladder=None):
+        super().__init__(inner)
+        if granule < 1:
+            raise ValueError(f"granule must be >= 1, got {granule}")
+        if margin <= 0:
+            raise ValueError(f"margin must be > 0, got {margin}")
+        self.granule = int(granule)
+        self.margin = float(margin)
+        self.ladder = ladder
+
+    def _cap(self, signals: Signals) -> float | None:
+        b = signals.diversity_bound
+        if b is None or not math.isfinite(b) or b <= 0:
+            return None
+        return self.margin * b
+
+    def observe(self, signals: Signals, clock: Clock) -> Decision | None:
+        d = self.inner.observe(signals, clock)
+        if d is None:
+            return d
+        cap = self._cap(signals)
+        if cap is None:
+            return d
+        bounded = False
+        if d.batch_size is not None and d.batch_size > cap:
+            m = self.granule
+            while m * 2 <= cap:
+                m *= 2
+            self.inner.set_batch_size(m)
+            d = dataclasses.replace(d, batch_size=m,
+                                    reason=d.reason + "+bound")
+            bounded = True
+        if (d.rung is not None and self.ladder is not None
+                and self.ladder.rungs[d.rung].dp > cap):
+            best = self.ladder.rungs[0]
+            for r in self.ladder.rungs:
+                if r.dp <= cap:
+                    best = r
+            d = dataclasses.replace(
+                d, rung=best.index,
+                reason=d.reason if bounded else d.reason + "+bound")
         return d
 
 

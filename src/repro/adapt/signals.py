@@ -80,6 +80,13 @@ class Signals:
     samples     samples accumulated since the last reset (device counter,
                 rides in the same transfer as diversity/gns).
     event       name of the external event for ``boundary='event'``.
+    diversity_bound  Yin et al.'s batch-size cap ``n * Delta_hat`` over the
+                same window (Theorem 3 of "Gradient Diversity: a Key
+                Ingredient for Scalable Distributed Learning": speedup is
+                provable only up to a batch of n*diversity).  Decoded off
+                the same accumulators and stacked into the SAME transfer as
+                diversity/gns — no extra device->host read.  The
+                ``BoundedRung`` combinator clamps decisions under it.
     """
 
     diversity: float | None = None
@@ -89,6 +96,7 @@ class Signals:
     batch_size: int = 0
     samples: float = 0.0
     event: str | None = None
+    diversity_bound: float | None = None
 
 
 class ThroughputWindow:
@@ -184,11 +192,14 @@ def _read_jit(estimator: str, reset: bool):
     from repro.core import diversity
 
     def read(div_state):
+        est = diversity.estimate(div_state, estimator)
         scalars = jnp.stack(
             [
-                diversity.estimate(div_state, estimator),
+                est,
                 gns_from_accumulators(div_state, estimator),
                 div_state.sample_count,
+                # Yin et al.'s batch cap n * Delta_hat, off the same decode
+                div_state.sample_count * est,
             ]
         )
         if not reset:
@@ -232,5 +243,6 @@ def read_signals(
         throughput=throughput,
         batch_size=int(batch_size),
         event=event,
+        diversity_bound=float(vals[3]),
     )
     return sig, state

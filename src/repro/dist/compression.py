@@ -16,6 +16,12 @@ the TRANSMITTED signal integrates to the true signal over time.
                           the dequantized mean plus the new error state.
 ``make_compressed_pod_mean``  wraps the above in ``shard_map`` over a mesh
                           axis for callers that hold unsharded trees.
+
+Production caller: ``repro.pod.step.make_pod_train_step`` — the train step
+``PodLadder`` compiles on every cross-pod (``pods > 1``) elastic rung calls
+``compressed_pod_mean`` inside its shard_map for the DCN gradient exchange,
+with the error-feedback residuals threaded through ``TrainState.err_state``
+(installed / re-zeroed per rung by ``PodLadder.adapt_state``).
 """
 
 from __future__ import annotations

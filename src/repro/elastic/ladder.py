@@ -30,11 +30,17 @@ from repro.dist.plan import ShardingPlan
 
 @dataclasses.dataclass(frozen=True)
 class Rung:
-    """One step of the ladder: a dp width and its sharding plan."""
+    """One step of the ladder: a dp width and its sharding plan.
+
+    ``pods`` is the number of pods the rung spans (1 for every base
+    ``MeshLadder`` rung; ``repro.pod.PodLadder`` builds cross-pod rungs
+    whose mesh carries a ``pods > 1`` leading axis).
+    """
 
     index: int
     dp: int
     plan: ShardingPlan
+    pods: int = 1
 
     @property
     def devices(self) -> int:
@@ -120,6 +126,16 @@ class MeshLadder:
 
     def plan_for_batch(self, m: int) -> ShardingPlan:
         return self.rung_for_batch(m).plan
+
+    # -- state hooks ---------------------------------------------------------
+    def adapt_state(self, state, src: Rung | None, dst: Rung):
+        """Hook for ladder-specific state at a rung transition, called by the
+        Trainer AFTER ``elastic.reshard`` moved ``state`` onto ``dst``
+        (``src=None`` for the initial placement / a checkpoint restore).  The
+        base ladder carries no rung-dependent state: identity.  ``PodLadder``
+        overrides this to install / drop / re-zero the compression
+        error-feedback residuals (``TrainState.err_state``)."""
+        return state
 
     # -- introspection -------------------------------------------------------
     @property

@@ -45,6 +45,8 @@ def schedule(events: list[dict]) -> list[dict]:
         kind = ev.get("kind")
         if kind == "reshard" and ev.get("scope") == "train":
             rung = ev.get("dst")
+        elif kind == "demote":
+            rung = ev.get("dst")
         elif kind == "restart" and ev.get("rung") is not None:
             rung = ev.get("rung")
         elif kind == "decision":
@@ -112,6 +114,13 @@ def lifecycle(events: list[dict]) -> str:
         elif kind == "inject":
             lines.append(f"inject    {ev.get('name')!r} at "
                          f"epoch={ev.get('epoch')} step={ev.get('step')}")
+        elif kind == "pod_lost":
+            lines.append(f"pod_lost  pod={ev.get('pod')} at "
+                         f"epoch={ev.get('epoch')} rung={_fmt(ev.get('rung'))}")
+        elif kind == "demote":
+            lines.append(f"demote    rung {_fmt(ev.get('src'))} -> "
+                         f"{ev.get('dst')} (pods {_fmt(ev.get('pods'))}, "
+                         f"dp {_fmt(ev.get('dp'))})")
     return "\n".join(lines)
 
 
@@ -174,21 +183,43 @@ def merge_traces(run_dir: str, out: str) -> str:
     return out
 
 
+def _drain(f, buf: str) -> tuple[list[str], str]:
+    """Read every COMPLETE line currently available on ``f``.
+
+    A live writer's trailing record may be torn (flushed mid-line, or read
+    mid-write): partial text is carried in ``buf`` and re-joined with the
+    rest of the line once the writer completes it — a follower never emits
+    (or json-parses) a half record, and never loses one either.  Returns
+    ``(complete_lines, carry_buffer)``; pure, so the torn-tail behaviour is
+    unit-testable without a live tail loop (tests/test_obs.py).
+    """
+    lines: list[str] = []
+    while True:
+        chunk = f.readline()
+        if not chunk:
+            return lines, buf
+        buf += chunk
+        if buf.endswith("\n"):
+            if buf.strip():
+                lines.append(buf.strip())
+            buf = ""
+
+
 def _follow(path: str) -> None:
-    """Tail the run log, printing each typed event as it lands."""
+    """Tail the run log, printing each typed event as it lands (torn/partial
+    trailing lines are held back until the writer completes them)."""
     if os.path.isdir(path):
         path = os.path.join(path, "runlog.jsonl")
     while not os.path.exists(path):
         time.sleep(0.2)
+    buf = ""
     with open(path) as f:
         while True:
-            line = f.readline()
-            if not line:
-                time.sleep(0.5)
-                continue
-            line = line.strip()
-            if line:
+            lines, buf = _drain(f, buf)
+            for line in lines:
                 print(line)
+            if not lines:
+                time.sleep(0.5)
 
 
 def main(argv=None):

@@ -14,11 +14,21 @@ the checkpoint is topology-free and the resumed Trainer re-derives its rung
 from the restored batch size.
 
   python -m repro.launch.supervisor --epochs 6 --fail-at 3 --elastic
+
+With ``--pods N`` the job runs on a ``repro.pod.PodLadder`` (cross-pod rungs
+move compressed gradients) and ``--lose-pod EPOCH[:POD]`` injects a HOST
+loss: instead of crash + checkpoint restore, the supervisor marks the pod
+unhealthy and DEMOTES — the surviving state reshards onto the widest
+all-healthy rung and training carries straight on (typed ``pod_lost`` /
+``demote`` run-log events record it).
+
+  python -m repro.launch.supervisor --epochs 6 --pods 2 --lose-pod 3
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import numpy as np
@@ -57,22 +67,55 @@ class Watchdog:
     def observe(self, step: int, dt: float):
         self.times.append(dt)
         hist = self.times[-self.window :]
-        if len(hist) >= 5:
-            mu, sd = float(np.mean(hist[:-1])), float(np.std(hist[:-1]) + 1e-9)
-            z = (dt - mu) / sd
-            if z > self.z_thresh:
-                self.flagged.append((step, z))
-                log.warning("straggler: step %d took %.3fs (z=%.1f)", step, dt, z)
-                if self.on_flag is not None:
-                    self.on_flag(step, z)
+        prev = hist[:-1]
+        # Degenerate windows: a z-score needs at least 2 prior observations
+        # for a spread.  Keep the historical warm-up (first check at the 5th
+        # observation) where the window allows it, but small windows
+        # (window < 5) now fire too instead of never.
+        if len(prev) < max(2, min(4, self.window - 1)):
+            return
+        mu, sd = float(np.mean(prev)), float(np.std(prev))
+        if sd <= 0.0:
+            # Constant history: any deviation is infinitely many sigmas out.
+            # Floor the spread relative to the mean so equal step times give
+            # z = 0 and a genuine spike still flags, while epsilon-level
+            # jitter (the old +1e-9 epsilon made ANY 4ns deviation a
+            # "straggler") does not.
+            sd = max(abs(mu), 1e-9) * 1e-3
+        z = (dt - mu) / sd
+        if z > self.z_thresh:
+            self.flagged.append((step, z))
+            log.warning("straggler: step %d took %.3fs (z=%.1f)", step, dt, z)
+            if self.on_flag is not None:
+                self.on_flag(step, z)
+
+
+def _normalize_losses(lose_pod) -> list[tuple[int, int | None]]:
+    """``lose_pod`` items are epochs or ``(epoch, pod)`` pairs; None pod
+    means "the last pod" (resolved against the live topology)."""
+    out: list[tuple[int, int | None]] = []
+    for item in lose_pod or []:
+        if isinstance(item, (tuple, list)):
+            e, p = item
+            out.append((int(e), int(p)))
+        else:
+            out.append((int(item), None))
+    return out
 
 
 def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
                    ckpt_dir: str, max_restarts: int = 10,
-                   tracer=None, runlog=None) -> list:
+                   tracer=None, runlog=None, lose_pod=None) -> list:
     """``make_trainer(ckpt_manager)`` builds a fresh Trainer bound to the
     checkpoint directory. Failures are injected at the given epochs; each
     crash is answered with a rebuild + resume. Returns the final history.
+
+    ``lose_pod`` injects HOST losses (epochs, or ``(epoch, pod)`` pairs) on
+    a ``repro.pod.PodLadder`` trainer: instead of the crash/restart path,
+    the pod is marked unhealthy and the trainer DEMOTES — the surviving
+    state is resharded onto the widest all-healthy rung with no checkpoint
+    restore (``pod_lost`` + ``demote`` run-log events mark it).  Losses
+    survive process restarts: a rebuilt ladder is re-marked before resume.
 
     ``tracer``/``runlog`` (repro.obs) are rebound onto every rebuilt Trainer
     and each (re)start is emitted as a typed ``restart`` event — one trace
@@ -83,12 +126,28 @@ def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
 
     restarts = 0
     pending_failures = set(fail_at)
+    pending_losses = _normalize_losses(lose_pod)
+    lost_pods: set[int] = set()
     while True:
         mgr = CheckpointManager(ckpt_dir, keep=3)
         trainer = make_trainer(mgr)
         if tracer is not None or runlog is not None:
             trainer.bind_obs(tracer=tracer, runlog=runlog)
+        health = getattr(getattr(trainer, "elastic", None), "health", None)
+        if (pending_losses or lost_pods) and health is None:
+            raise ValueError(
+                "lose_pod injection needs a trainer on a repro.pod.PodLadder "
+                "(it has no pod health registry to mark)"
+            )
+        # a rebuilt trainer has a fresh ladder: re-mark earlier losses BEFORE
+        # resume() so the restored rung is already health-filtered
+        for p in lost_pods:
+            health.mark_lost(p)
         trainer.resume()
+        if health is not None and lost_pods:
+            # no-checkpoint start (resume was a no-op) may still sit on an
+            # unhealthy initial rung; demote() no-ops when already healthy
+            trainer.demote(note="pods lost before restart")
         rung = getattr(trainer, "rung", None)
         if runlog is not None and runlog.enabled:
             runlog.emit("restart", restarts=restarts,
@@ -108,9 +167,33 @@ def run_supervised(make_trainer, total_epochs: int, fail_at: list[int],
         try:
             while trainer.cursor.epoch < total_epochs:
                 t0 = time.time()
-                if trainer.cursor.epoch in pending_failures:
-                    pending_failures.discard(trainer.cursor.epoch)
-                    raise InjectedFailure(f"injected at epoch {trainer.cursor.epoch}")
+                ep = trainer.cursor.epoch
+                if ep in pending_failures:
+                    pending_failures.discard(ep)
+                    raise InjectedFailure(f"injected at epoch {ep}")
+                for e, p in [lp for lp in pending_losses if lp[0] == ep]:
+                    pending_losses.remove((e, p))
+                    pod = p if p is not None else health.num_pods - 1
+                    cur = trainer.rung
+                    src_rung = cur.index if cur is not None else None
+                    health.mark_lost(pod)
+                    lost_pods.add(pod)
+                    if runlog is not None and runlog.enabled:
+                        runlog.emit("pod_lost", pod=pod, epoch=ep,
+                                    rung=src_rung)
+                    ctx = (tracer.span("demote", scope="train", pod=pod,
+                                       epoch=ep)
+                           if tracer is not None else contextlib.nullcontext())
+                    with ctx:
+                        src_i, dst_i = trainer.demote(note=f"pod {pod} lost")
+                    if runlog is not None and runlog.enabled:
+                        runlog.emit("demote", src=src_i, dst=dst_i,
+                                    pods=trainer.rung.pods,
+                                    dp=trainer.rung.dp, epoch=ep)
+                    log.warning(
+                        "pod %d lost at epoch %d: DEGRADED rung %s -> %s "
+                        "(dp=%d), no restart", pod, ep, src_i, dst_i,
+                        trainer.rung.dp)
                 trainer.run_epoch()
                 trainer.save()
                 watchdog.observe(trainer.cursor.epoch, time.time() - t0)
@@ -132,9 +215,20 @@ def main():
                     help="run on a repro.elastic MeshLadder: a mid-run "
                          "failure after the batch has grown restarts onto a "
                          "DIFFERENT (wider) rung than the run started on")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="run on a repro.pod.PodLadder spanning N virtual "
+                         "pods (cross-pod rungs move compressed gradients); "
+                         "implies 8 CPU host devices unless --devices")
+    ap.add_argument("--lose-pod", action="append", default=[],
+                    metavar="EPOCH[:POD]",
+                    help="inject a HOST loss at EPOCH (of pod POD, default "
+                         "the last pod): the supervisor DEGRADES onto the "
+                         "widest all-healthy rung instead of restarting; "
+                         "repeatable")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N CPU host devices (before first jax use; "
-                         "--elastic defaults to 8 so the ladder has rungs)")
+                         "--elastic/--pods default to 8 so the ladder has "
+                         "rungs)")
     ap.add_argument("--trace", default=None, metavar="DIR",
                     help="record a Chrome/Perfetto trace (repro.obs) spanning "
                          "every restart; writes DIR/trace.json at exit")
@@ -145,7 +239,7 @@ def main():
                          "DIR>/runlog.jsonl")
     args = ap.parse_args()
 
-    ndev = args.devices or (8 if args.elastic else 0)
+    ndev = args.devices or (8 if (args.elastic or args.pods) else 0)
     if ndev:
         # effective until the first backend init (first device use), which in
         # this process is the trainer build below
@@ -180,6 +274,13 @@ def main():
             return AdaBatchPolicy(64, 1024, granule=16)
         return FixedPolicy(64, 1024, granule=16)
 
+    def make_ladder():
+        if args.pods:
+            from repro.pod import PodLadder
+
+            return PodLadder(pods=args.pods, granule=16)
+        return MeshLadder(granule=16) if args.elastic else None
+
     def make_trainer(mgr):
         fns = ModelFns(
             batch_loss=small.logreg_batch_loss,
@@ -191,18 +292,25 @@ def main():
         return Trainer(
             fns, small.logreg_init(jax.random.key(0), 64), sgd(momentum=0.9),
             program, train, val, estimator="exact", ckpt=mgr,
-            elastic=MeshLadder(granule=16) if args.elastic else None,
+            elastic=make_ladder(),
         )
 
     from repro.obs import from_cli as obs_from_cli
 
+    lose_pod: list = []
+    for spec in args.lose_pod:
+        e, _, p = str(spec).partition(":")
+        lose_pod.append((int(e), int(p)) if p else int(e))
+
     tracer, runlog = obs_from_cli(
         args.trace, args.runlog,
         meta={"cmd": "supervisor", "method": args.method,
-              "elastic": bool(args.elastic), "fail_at": args.fail_at},
+              "elastic": bool(args.elastic), "fail_at": args.fail_at,
+              "pods": args.pods, "lose_pod": args.lose_pod},
     )
     history = run_supervised(make_trainer, args.epochs, args.fail_at,
-                             args.ckpt_dir, tracer=tracer, runlog=runlog)
+                             args.ckpt_dir, tracer=tracer, runlog=runlog,
+                             lose_pod=lose_pod)
     if tracer is not None:
         print(f"trace: {tracer.save(args.trace)}")
     if runlog is not None:

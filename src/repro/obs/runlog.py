@@ -47,6 +47,9 @@ EVENTS = {
     # engine events (scope: "train" | "serve")
     "compile": ("scope", "what", "seconds"),
     "reshard": ("scope", "src", "dst"),
+    # pod supervision (repro.pod): a host loss degrades the ladder in place
+    "pod_lost": ("pod", "epoch"),
+    "demote": ("src", "dst", "pods"),
     # serving
     "serve_admit": ("rid", "prompt_len", "budget"),
     "serve_retire": ("rid", "pos"),

@@ -1,0 +1,22 @@
+"""repro.pod — host-spanning elastic rungs (multi-pod data parallelism).
+
+A *pod* is one host's worth of devices (fast ICI inside, slow DCN between).
+``PodTopology`` partitions the flat device list into pods — on the 8-device
+CPU harness this emulates N hosts in-process, so every cross-pod code path
+runs under the normal test suite.  ``PodLadder`` extends ``elastic.MeshLadder``
+with cross-pod rungs whose meshes carry a ``pods > 1`` leading axis: on those
+rungs the gradient mean crosses the pod axis through the error-feedback int8
+compressor (``dist.compression``) — int8 payload + f32 scale on the wire —
+with the residuals threaded through ``TrainState.err_state`` and re-zeroed
+at every rung transition.  ``PodHealth`` tracks which pods are alive;
+``launch/supervisor.py`` answers a pod loss by DEGRADING the ladder onto the
+widest all-healthy rung (``Trainer.demote``) instead of restarting from a
+checkpoint.
+"""
+
+from repro.pod.health import PodHealth
+from repro.pod.ladder import PodLadder
+from repro.pod.step import make_pod_train_step
+from repro.pod.topology import PodTopology
+
+__all__ = ["PodTopology", "PodHealth", "PodLadder", "make_pod_train_step"]

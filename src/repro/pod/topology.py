@@ -1,0 +1,59 @@
+"""Pod topology: hosts x devices-per-host over one flat device list.
+
+Production multi-host jax gives each process its own slice of
+``jax.devices()``; here the same structure is *emulated in-process* by
+partitioning the single-process device list into equal contiguous pods, so
+the cross-pod mesh axis, the compressed DCN gradient exchange, and the
+supervisor's degrade path all exercise on the 8-CPU-device test harness.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+
+class PodTopology:
+    """Equal partition of a flat device list into ``num_pods`` virtual pods.
+
+    ``pods[i]`` is pod *i*'s device list (contiguous, in order), so pod 0's
+    devices are always a prefix of the flat list — the same prefix-nesting
+    invariant ``MeshLadder`` relies on for widen/narrow reshards.
+    """
+
+    def __init__(self, num_pods: int, devices: Sequence[Any] | None = None):
+        if devices is None:
+            import jax
+
+            devices = jax.devices()
+        devices = list(devices)
+        num_pods = int(num_pods)
+        if num_pods < 1:
+            raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+        if len(devices) % num_pods != 0:
+            raise ValueError(
+                f"{len(devices)} devices do not partition into {num_pods} "
+                f"equal pods"
+            )
+        self.num_pods = num_pods
+        self.devices = devices
+        self.devices_per_pod = len(devices) // num_pods
+        self.pods: list[list[Any]] = [
+            devices[i * self.devices_per_pod : (i + 1) * self.devices_per_pod]
+            for i in range(num_pods)
+        ]
+
+    def pod_of(self, device: Any) -> int:
+        """Which pod a device belongs to (by identity)."""
+        for i, pod in enumerate(self.pods):
+            if any(d is device for d in pod):
+                return i
+        raise ValueError(f"device {device!r} is not in this topology")
+
+    def __len__(self) -> int:
+        return self.num_pods
+
+    def __repr__(self) -> str:
+        return (
+            f"PodTopology(num_pods={self.num_pods}, "
+            f"devices_per_pod={self.devices_per_pod})"
+        )

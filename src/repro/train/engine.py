@@ -153,7 +153,12 @@ class StepEngine:
     the compile cache by (bucket, rung, tier), so a ``Decision.estimator``
     flip compiles the new tier's buckets on first use and every flip back
     onto a seen tier is a cache hit (the old behaviour rebuilt the whole
-    jit family per flip).
+    jit family per flip).  A third positional parameter, ``(key, tier,
+    rung)``, makes the build *rung-aware*: the active ``engine.rung`` token
+    is passed through so the build can return a structurally different step
+    program per rung (``repro.pod.PodLadder`` compiles a shard_map'd
+    compressed cross-pod step on ``pods > 1`` rungs and the plain step
+    elsewhere); the jit cache then keys by (bucket, tier, rung).
     """
 
     def __init__(
@@ -185,6 +190,8 @@ class StepEngine:
             n_params = 1
         #: whether build_step accepts a tier argument (see class docstring)
         self.tiered = n_params >= 2
+        #: whether build_step also accepts the rung token (see class docstring)
+        self.rung_aware = n_params >= 3
         # The active estimator-tier token (any hashable; the Trainer uses the
         # tier name). Part of the executable cache key exactly like ``rung``.
         # None = the build's own default tier (non-tiered engines stay None).
@@ -218,7 +225,7 @@ class StepEngine:
                 "engine.tier was set but build_step takes no tier argument; "
                 "tier flips on hand-built engines need a (key, tier) build"
             )
-        jkey = (key, self.tier)
+        jkey = (key, self.tier, self.rung if self.rung_aware else None)
         if jkey not in self._jits:
             kwargs = {}
             if self._in_shardings is not None:
@@ -227,7 +234,12 @@ class StepEngine:
                 kwargs["out_shardings"] = self._out_shardings
             if self.donate:
                 kwargs["donate_argnums"] = (0,)
-            fn = self._build(key, self.tier) if self.tiered else self._build(key)
+            if self.rung_aware:
+                fn = self._build(key, self.tier, self.rung)
+            elif self.tiered:
+                fn = self._build(key, self.tier)
+            else:
+                fn = self._build(key)
             self._jits[jkey] = jax.jit(fn, **kwargs)
         return self._jits[jkey]
 

@@ -172,6 +172,19 @@ class Trainer:
             self._ensure_rung(self.adapt.batch_size)
 
     def _build_engine(self, donate: bool) -> StepEngine:
+        # A ladder may supply its own rung-aware engine (duck-typed so the
+        # base Trainer never imports repro.pod): PodLadder compiles the
+        # shard_map'd compressed cross-pod step on pods>1 rungs.
+        engine_for = getattr(self._elastic, "engine_for", None)
+        if engine_for is not None:
+            return engine_for(
+                self.fns,
+                self.optimizer,
+                estimator=self.estimator,
+                diversity_on=self.adapt.needs_diversity,
+                donate=donate,
+                psn_chunk=self.psn_microbatch,
+            )
         return StepEngine.for_model_fns(
             self.fns,
             self.optimizer,
@@ -199,6 +212,12 @@ class Trainer:
     def rung(self):
         """The live elastic ladder rung (None outside elastic mode)."""
         return self._rung
+
+    @property
+    def elastic(self):
+        """The elastic ladder driving this trainer (None outside elastic
+        mode) — the supervisor reaches pod health through this."""
+        return self._elastic
 
     # ------------------------------------------------------------------
     @property
@@ -258,6 +277,9 @@ class Trainer:
             )
         self._rung = rung
         self.engine.rung = rung.index
+        # ladder-specific state (e.g. PodLadder's compression residuals) is
+        # installed/dropped AFTER the reshard so it lands on the new mesh
+        self.state = self._elastic.adapt_state(self.state, src, rung)
         if src is not None:  # initial placement is not a transition
             self.engine.stats.reshards += 1
             if self._runlog.enabled:
@@ -268,6 +290,21 @@ class Trainer:
                                   note=note)
             log.info("elastic: rung %d -> %d (dp %d -> %d) %s",
                      src.index, rung.index, src.dp, rung.dp, note)
+
+    def demote(self, note: str = "pod lost") -> tuple[int | None, int]:
+        """Degrade-don't-restart: reshard the LIVE state onto the widest rung
+        the (health-filtered) ladder still allows for the current batch size
+        — no checkpoint restore, the surviving optimizer/diversity state
+        carries straight on.  The supervisor calls this when a pod is lost
+        (after marking it in the ladder's health registry).  Returns
+        ``(src_rung_index, dst_rung_index)``; a no-op transition returns the
+        same index twice."""
+        if self._elastic is None:
+            raise ValueError("demote() needs an elastic ladder")
+        src = self._rung.index if self._rung is not None else None
+        self._transition(self._elastic.rung_for_batch(self.adapt.batch_size),
+                         note=note)
+        return src, self._rung.index
 
     def _batch_sharding(self, leading: int):
         """NamedSharding over the live plan's dp axes, if one divides the
@@ -594,5 +631,9 @@ class Trainer:
             ),
             self._live_plan,
         )
+        if self._elastic is not None and self._rung is not None:
+            # checkpoints never carry ladder-specific state (err_state is
+            # transient wire state): re-install it for the restored rung
+            self.state = self._elastic.adapt_state(self.state, None, self._rung)
         log.info("resumed from epoch %d", self.cursor.epoch)
         return True

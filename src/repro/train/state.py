@@ -18,6 +18,11 @@ class TrainState(NamedTuple):
     opt_state: PyTree
     div_state: diversity.DiversityState
     step: jax.Array
+    # Cross-pod compression error-feedback residuals (repro.pod): a stacked
+    # ``(pods, *param_shape)`` f32 tree on cross-pod rungs, None everywhere
+    # else. Transient wire state — installed/zeroed by PodLadder.adapt_state
+    # at rung transitions and deliberately NOT checkpointed.
+    err_state: PyTree = None
 
 
 def init_state(params: PyTree, optimizer: Optimizer, div_dtype=jnp.float32) -> TrainState:

@@ -253,4 +253,4 @@ def epoch_end_host(state: TrainState, estimator: str = "moment") -> tuple[float,
     device->host transfer, never a retrace."""
     delta = float(_estimate_jit(estimator)(state.div_state))
     reset = _reset_jit()(state.div_state)
-    return delta, TrainState(state.params, state.opt_state, reset, state.step)
+    return delta, state._replace(div_state=reset)

@@ -1,0 +1,29 @@
+"""CI smoke for the cross-pod benchmark: the `-m "not slow"`-safe variant
+runs in seconds, must emit a well-formed BENCH_pod.json, and carries the
+in-bench acceptance asserts (wire ratio <= 0.30x, EF residuals live)."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_pod  # noqa: E402
+
+
+def test_bench_pod_smoke(tmp_path):
+    out = tmp_path / "BENCH_pod.json"
+    rows = bench_pod.run(smoke=True, out_path=str(out))
+    record = json.loads(out.read_text())
+    assert record["workload"]["smoke"] is True
+    for kind in ("uncompressed_pmean", "compressed_int8_ef"):
+        r = record[kind]
+        assert r["steps_per_sec"] > 0
+        assert r["pods"] == 2 and r["rung_dp"] == 8  # the cross-pod rung
+    wire = record["wire"]
+    assert wire["wire_ratio"] <= record["wire_ratio_max"] == 0.30
+    assert wire["compressed_bytes_per_exchange"] < wire["f32_bytes_per_exchange"]
+    assert record["ef_residual_l1"] > 0
+    assert record["val_loss_rel_err"] <= 0.10
+    names = [name for name, _, _ in rows]
+    assert "pod_compressed_int8_ef" in names and "pod_wire_ratio" in names

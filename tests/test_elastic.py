@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, strategies as st
+
 from repro.ckpt import CheckpointManager
 from repro.core import AdaptiveBatchController, make_policy
 from repro.core.batch_policy import num_buckets
@@ -90,6 +92,27 @@ class TestMeshLadder:
     def test_too_few_devices_for_model_axes_raises(self):
         with pytest.raises(ValueError, match="cannot carry"):
             MeshLadder(jax.devices()[:1], model_axes=(("model", 2),))
+
+    @settings(max_examples=24)
+    @given(ndev=st.integers(1, 8), granule=st.integers(1, 32))
+    def test_default_dp_widths_property(self, ndev, granule):
+        """For ANY device count (non-pow2 included) the default widths are a
+        sorted deduped pow2 chain topped by the device count, every rung's
+        devices are a prefix of the flat list, and the selected dp width is
+        monotone non-decreasing over the batch lattice m = granule * 2^k."""
+        ladder = MeshLadder(jax.devices()[:ndev], granule=granule)
+        widths = ladder.widths
+        assert widths == sorted(set(widths)) and widths[-1] == ndev
+        pow2 = [1 << i for i in range(ndev.bit_length()) if 1 << i <= ndev]
+        assert [w for w in widths if w & (w - 1) == 0] == pow2
+        assert all(w in pow2 or w == ndev for w in widths)
+        for r in ladder:
+            assert [d.id for d in r.plan.mesh.devices.flat] == \
+                   [d.id for d in jax.devices()[: r.dp]]
+        dps = [ladder.rung_for_batch(granule << k).dp for k in range(8)]
+        assert dps == sorted(dps)  # growing the batch never narrows the mesh
+        for k, d in enumerate(dps):
+            assert ladder.plan_for_batch(granule << k).dp_size == d
 
 
 # ---------------------------------------------------------------------------

@@ -373,6 +373,39 @@ class TestMonitor:
         assert "reshard   [train]" in text
         assert "inject    'probe'" in text
 
+    def test_follow_drain_holds_back_torn_lines(self, tmp_path):
+        """--follow must never emit (or json-parse) a half-written trailing
+        record: a line flushed mid-write stays in the carry buffer and is
+        re-read whole once the writer completes it."""
+        rec1 = json.dumps({"v": 1, "kind": "epoch", "epoch": 0})
+        rec2 = json.dumps({"v": 1, "kind": "demote", "src": 3, "dst": 2})
+        path = tmp_path / "runlog.jsonl"
+        with open(path, "w") as w:
+            w.write(rec1 + "\n" + rec2[:10])  # torn mid-record
+            w.flush()
+            with open(path) as r:
+                lines, buf = monitor._drain(r, "")
+                assert lines == [rec1]  # the torn tail is NOT emitted
+                assert buf == rec2[:10]
+                # a second poll before the writer finishes yields nothing
+                lines2, buf = monitor._drain(r, buf)
+                assert lines2 == [] and buf == rec2[:10]
+                # writer completes the record: the follower re-reads it whole
+                w.write(rec2[10:] + "\n")
+                w.flush()
+                lines3, buf = monitor._drain(r, buf)
+                assert lines3 == [rec2] and buf == ""
+                assert [json.loads(l) for l in [*lines, *lines3]] == [
+                    {"v": 1, "kind": "epoch", "epoch": 0},
+                    {"v": 1, "kind": "demote", "src": 3, "dst": 2}]
+
+    def test_drain_skips_blank_lines(self, tmp_path):
+        path = tmp_path / "log.jsonl"
+        path.write_text("a\n\n   \nb\n")
+        with open(path) as r:
+            lines, buf = monitor._drain(r, "")
+        assert lines == ["a", "b"] and buf == ""
+
     def test_merge_traces(self, traced_run, tmp_path):
         _, tracer, run_dir = traced_run
         out = str(tmp_path / "merged.json")

@@ -112,6 +112,37 @@ class TestProductionStepEquivalence:
 
 
 class TestSupervisor:
+    def test_watchdog_degenerate_windows(self):
+        """Small and zero-variance windows must behave, not divide by ~0:
+        window <= 2 can never form a spread (no flags, no crash); a constant
+        history plus epsilon jitter is NOT a straggler (the old +1e-9 sd
+        epsilon flagged any 4ns deviation); a genuine spike still flags, and
+        windows of 3-4 observations are functional rather than mute."""
+        from repro.launch.supervisor import Watchdog
+
+        # window <= 2: z-score needs 2 prior observations for a spread
+        for w in (1, 2):
+            wd = Watchdog(window=w, z_thresh=1.0)
+            for i, dt in enumerate([0.01, 0.01, 10.0, 0.01]):
+                wd.observe(i, dt)
+            assert wd.flagged == []
+
+        # constant history: epsilon jitter passes, a real spike flags
+        wd = Watchdog(window=5, z_thresh=4.0)
+        for i in range(6):
+            wd.observe(i, 2.0)
+        wd.observe(6, 2.0 + 1e-6)
+        assert wd.flagged == []  # old code: z ~ 1000 false straggler
+        wd.observe(7, 10.0)
+        assert len(wd.flagged) == 1 and wd.flagged[0][0] == 7
+
+        # small windows now fire instead of never reaching the warm-up gate
+        flags = []
+        wd = Watchdog(window=3, z_thresh=2.0, on_flag=lambda s, z: flags.append(s))
+        for i, dt in enumerate([1.0, 1.01, 0.99, 5.0]):
+            wd.observe(i, dt)
+        assert flags == [3] and wd.flagged[0][0] == 3
+
     def test_failure_injection_and_restart(self, tmp_path):
         from repro.launch.supervisor import run_supervised
 
