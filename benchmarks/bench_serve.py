@@ -19,11 +19,19 @@ shared prefix blocks EXACTLY ONCE and each request only its divergent tail
 peak live pool blocks x block size against the dense engine's
 ``max_slots * max_seq`` preallocation.
 
+The ``policy`` section drives a two-tenant burst trace (a big tenant's
+burst up front, a small tenant trickling in just behind it) through one
+engine per ``serve.policy`` ServePolicy and scores per-tenant queue wait
+(decode steps between submit and admission, p50/p95).  Under FIFO the
+small tenant queues behind the entire burst; fair-share deficit
+round-robin admits it at the first post-burst boundary — the section
+asserts the strict minority-p95 reduction.
+
 Each arm drives the trace twice: pass 1 warms the (bucket, rung) compile
 caches, pass 2 is measured (tokens/s excludes compilation, like the other
 benches' warmup convention).
 
-  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--policy fair]
 """
 
 from __future__ import annotations
@@ -48,7 +56,7 @@ from repro.core.batch_policy import num_buckets
 from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
 from repro.models import transformer as tf
-from repro.serve import Request, ServeEngine, padded_prompt_len
+from repro.serve import POLICIES, Request, ServeEngine, padded_prompt_len
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
@@ -100,7 +108,7 @@ def _drive(engine: ServeEngine, trace) -> tuple[list, float]:
     return [engine.result(rid) for rid in rids], wall
 
 
-def _serve(mode: str, smoke: bool):
+def _serve(mode: str, smoke: bool, policy: str = "fifo"):
     cfg = _cfg()
     params = tf.init_params(cfg, jax.random.key(0))
     devices = jax.devices()
@@ -115,7 +123,7 @@ def _serve(mode: str, smoke: bool):
         raise ValueError(mode)
     with ctx:
         engine = ServeEngine(cfg, params, max_slots=MAX_SLOTS, max_seq=128,
-                             elastic=ladder)
+                             elastic=ladder, policy=policy)
         _drive(engine, _trace(smoke))  # pass 1: warm the compile caches
         warm_compiles = engine.stats.compiles
         warm_stats = engine.stats.as_dict()
@@ -124,6 +132,7 @@ def _serve(mode: str, smoke: bool):
     tokens = sum(r.steps for r in results)
     return {
         "devices": len(devices),
+        "policy": policy,
         "tokens": tokens,
         "wall_s": round(wall, 3),
         "tokens_per_sec": round(tokens / wall, 2) if wall > 0 else 0.0,
@@ -220,11 +229,102 @@ def _paged(smoke: bool):
     }
 
 
-def run(smoke: bool = False, out_path: str | None = None):
+def _burst_trace(smoke: bool, seed: int = 2):
+    """Two-tenant contention trace: tenant ``big`` bursts every request at
+    step 0; tenant ``small`` trickles in one per step just behind it, so the
+    burst is already slot-resident when the small tenant queues.  Every
+    request generates the same token count — admissions happen in clean
+    waves, which makes the per-policy queue waits directly comparable."""
+    rng = np.random.default_rng(seed)
+    n_big, n_small = (10, 3) if smoke else (16, 4)
+    max_new = 8 if smoke else 16
+
+    def _req(tenant: str, priority: int) -> Request:
+        return Request(
+            prompt=rng.integers(1, 256, size=int(rng.integers(4, 8))).astype(
+                np.int32),
+            max_new_tokens=max_new, tenant=tenant, priority=priority,
+        )
+
+    trace = [(0, _req("big", 0)) for _ in range(n_big)]
+    trace += [(1 + i, _req("small", 1)) for i in range(n_small)]
+    return trace
+
+
+def _drive_waits(engine: ServeEngine, trace):
+    """Like :func:`_drive` but also scores queue wait per request: decode
+    steps between submit and the boundary that admitted it (a rid leaving
+    ``Scheduler.queued()`` has been assigned a slot)."""
+    start = engine.stats.steps
+    pending = list(trace)
+    submit_step: dict[int, int] = {}
+    admit_step: dict[int, int] = {}
+    tenant_of: dict[int, str] = {}
+    waiting: set[int] = set()
+
+    def _submit(item):
+        rid = engine.submit(item[1])
+        submit_step[rid] = engine.stats.steps - start
+        tenant_of[rid] = item[1].tenant
+        waiting.add(rid)
+
+    def _settle():
+        still = {rid for rid, _, _ in engine.sched.queued()}
+        for rid in [r for r in waiting if r not in still]:
+            admit_step[rid] = engine.stats.steps - start
+            waiting.discard(rid)
+
+    while pending or engine.busy:
+        while pending and engine.stats.steps - start >= pending[0][0]:
+            _submit(pending.pop(0))
+        if not engine.step() and pending:
+            _submit(pending.pop(0))
+        _settle()
+    assert not waiting, f"requests never admitted: {sorted(waiting)}"
+    waits: dict[str, list[int]] = {}
+    for rid, t in submit_step.items():
+        waits.setdefault(tenant_of[rid], []).append(admit_step[rid] - t)
+    return waits
+
+
+def _policy(smoke: bool):
+    """The policy section: the same burst trace through one engine per
+    ServePolicy, scored on per-tenant queue wait.  Slot capacity is held
+    below the burst size so admission ORDER is the only thing the policies
+    can differ on — tokens decoded are identical across arms."""
+    cfg = _cfg()
+    params = tf.init_params(cfg, jax.random.key(0))
+    slots = 4
+    out = {"workload": {"task": "two-tenant-burst", "max_slots": slots,
+                        "tenants": ["big", "small"], "smoke": smoke}}
+    for name in POLICIES:
+        engine = ServeEngine(cfg, params, max_slots=slots, max_seq=64,
+                             policy=name)
+        waits = _drive_waits(engine, _burst_trace(smoke))
+        out[name] = {
+            tenant: {
+                "n": len(w),
+                "p50_wait_steps": round(float(np.percentile(w, 50)), 2),
+                "p95_wait_steps": round(float(np.percentile(w, 95)), 2),
+                "mean_wait_steps": round(float(np.mean(w)), 2),
+            }
+            for tenant, w in sorted(waits.items())
+        }
+    fifo_p95 = out["fifo"]["small"]["p95_wait_steps"]
+    fair_p95 = out["fair"]["small"]["p95_wait_steps"]
+    # the acceptance invariant: deficit round-robin strictly cuts the
+    # minority tenant's tail wait vs queueing behind the whole burst
+    assert fair_p95 < fifo_p95, (fair_p95, fifo_p95)
+    out["fair_vs_fifo_minority_p95"] = round(fair_p95 / max(fifo_p95, 1e-9), 4)
+    return out
+
+
+def run(smoke: bool = False, out_path: str | None = None, policy: str = "fifo"):
     """Returns benchmark CSV rows; writes the JSON record as a side effect."""
-    fixed = _serve("fixed", smoke)
-    elastic = _serve("elastic", smoke)
+    fixed = _serve("fixed", smoke, policy=policy)
+    elastic = _serve("elastic", smoke, policy=policy)
     paged = _paged(smoke)
+    pol = _policy(smoke)
 
     bound = num_buckets(MAX_SLOTS, 1) * elastic["num_rungs"]
     ratio = elastic["tokens_per_sec"] / max(fixed["tokens_per_sec"], 1e-9)
@@ -234,6 +334,7 @@ def run(smoke: bool = False, out_path: str | None = None):
         "fixed_full_mesh": fixed,
         "elastic": elastic,
         "paged": paged,
+        "policy": pol,
         "elastic_vs_fixed_tokens_per_sec": round(ratio, 3),
         "compile_bound_bucket_x_rung": bound,
     }
@@ -264,6 +365,13 @@ def run(smoke: bool = False, out_path: str | None = None):
         f"prefill_chunks={paged['shared_prefix']['prefill_chunks']};"
         f"peak_blocks={paged['peak_blocks']}/{paged['pool_blocks']}",
     ))
+    rows.append((
+        "serve_policy_fairness", 0.0,
+        f"fair_vs_fifo_minority_p95={pol['fair_vs_fifo_minority_p95']};"
+        f"fifo_small_p95={pol['fifo']['small']['p95_wait_steps']};"
+        f"fair_small_p95={pol['fair']['small']['p95_wait_steps']};"
+        f"priority_small_p95={pol['priority']['small']['p95_wait_steps']}",
+    ))
     return rows
 
 
@@ -271,8 +379,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--policy", default="fifo", choices=list(POLICIES),
+                    help="ServePolicy for the elastic/fixed throughput arms "
+                         "(the policy section always sweeps all of them)")
     args = ap.parse_args()
-    for name, us, derived in run(smoke=args.smoke, out_path=args.out):
+    rows = run(smoke=args.smoke, out_path=args.out, policy=args.policy)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -125,8 +125,13 @@ class ThroughputWindow:
         self._start: float | None = None
 
     def _evict(self, now: float) -> None:
+        # strict <: the trailing window is the CLOSED interval
+        # [now - window_s, now] — its length is exactly the window_s the
+        # denominator charges, so a sample exactly window_s old still
+        # counts (the old <= dropped it while still dividing by the full
+        # window, deflating the rate at the boundary)
         edge = now - self.window_s
-        while self._samples and self._samples[0][0] <= edge:
+        while self._samples and self._samples[0][0] < edge:
             self._samples.popleft()
 
     def add(self, n: float = 1.0, now: float | None = None) -> None:
@@ -142,7 +147,10 @@ class ThroughputWindow:
 
         The denominator is ``min(window_s, now - first_event_time)`` — a
         window that has only been filling for 2 of its 10 seconds divides by
-        2, not 10.
+        2, not 10.  A burst whose events all landed at a single instant has
+        no measurable span: the rate charges the full window instead — the
+        conservative lower bound — so recorded events always yield a finite,
+        non-None rate (the old code returned None as if nothing happened).
         """
         if self._start is None:
             return None
@@ -151,8 +159,7 @@ class ThroughputWindow:
         count = sum(n for _, n in self._samples)
         span = min(self.window_s, now - self._start)
         if span <= 0.0:
-            # all events landed at a single instant: no measurable span yet
-            return None
+            return count / self.window_s
         return count / span
 
 

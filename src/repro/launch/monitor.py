@@ -114,6 +114,12 @@ def lifecycle(events: list[dict]) -> str:
         elif kind == "inject":
             lines.append(f"inject    {ev.get('name')!r} at "
                          f"epoch={ev.get('epoch')} step={ev.get('step')}")
+        elif kind == "serve_policy":
+            lines.append(f"policy    {ev.get('reason')!r} at step="
+                         f"{ev.get('step')} reordered={_fmt(ev.get('reordered'))} "
+                         f"budget={_fmt(ev.get('slot_budget'))} "
+                         f"patience={_fmt(ev.get('shrink_patience'))} "
+                         f"queue={_fmt(ev.get('queue_depth'))}")
         elif kind == "pod_lost":
             lines.append(f"pod_lost  pod={ev.get('pod')} at "
                          f"epoch={ev.get('epoch')} rung={_fmt(ev.get('rung'))}")

@@ -7,9 +7,16 @@ the KV cache between steps); ``--dp N`` instead pins a fixed N-wide
 data-parallel plan for the whole run (today's behaviour, the baseline
 ``benchmarks/bench_serve.py`` measures against).
 
+``--policy fifo|priority|fair`` selects the ``serve.policy.ServePolicy``
+driving admission order / slot budget at every boundary (fifo is the
+default and reproduces the pre-hook engine; priority/fair read the
+``tenant``/``priority`` metadata ``--tenants`` stamps onto the synthetic
+requests).
+
 Examples:
   python -m repro.launch.serve --arch yi-6b --requests 16
   python -m repro.launch.serve --elastic --requests 32 --ramp 8
+  python -m repro.launch.serve --policy fair --tenants 2 --ramp 2
   python -m repro.launch.serve --dp 8 --sampler categorical --out serve.json
 """
 
@@ -27,10 +34,14 @@ from repro.dist.plan import ShardingPlan, use_plan
 from repro.elastic import MeshLadder
 from repro.models import transformer as tf
 from repro.obs import from_cli as obs_from_cli
-from repro.serve import Request, ServeEngine
+from repro.serve import POLICIES, Request, ServeEngine
 
 
-def build_requests(cfg, n: int, *, max_new: int, seed: int) -> list[Request]:
+def build_requests(cfg, n: int, *, max_new: int, seed: int,
+                   tenants: int = 0) -> list[Request]:
+    """Synthetic request set; with ``tenants > 0`` request *i* belongs to
+    tenant ``t<i % tenants>`` with priority ``i % tenants`` (so priority
+    and fair-share policies have classes to act on)."""
     rng = np.random.default_rng(seed)
     return [
         Request(
@@ -38,8 +49,10 @@ def build_requests(cfg, n: int, *, max_new: int, seed: int) -> list[Request]:
                 1, cfg.vocab_size, size=int(rng.integers(4, 24))
             ).astype(np.int32),
             max_new_tokens=int(rng.integers(max(max_new // 2, 1), max_new + 1)),
+            tenant=f"t{i % tenants}" if tenants else None,
+            priority=i % tenants if tenants else 0,
         )
-        for _ in range(n)
+        for i in range(n)
     ]
 
 
@@ -88,6 +101,13 @@ def main():
                          "per boundary); chunks interleave with decode")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable chain-hash prompt prefix sharing")
+    ap.add_argument("--policy", default="fifo", choices=list(POLICIES),
+                    help="serve-side admission policy (serve/policy.py); "
+                         "fifo reproduces the pre-hook engine token-for-token")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="stamp round-robin tenant/priority metadata onto the "
+                         "synthetic requests (gives --policy priority|fair "
+                         "classes to act on)")
     ap.add_argument("--sampler", default="greedy", choices=["greedy", "categorical"])
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -129,7 +149,8 @@ def main():
     tracer, runlog = obs_from_cli(
         args.trace, args.runlog,
         meta={"cmd": "serve", "arch": args.arch, "requests": args.requests,
-              "seed": args.seed, "elastic": bool(args.elastic)},
+              "seed": args.seed, "elastic": bool(args.elastic),
+              "policy": args.policy},
     )
     with plan_ctx:
         engine = ServeEngine(
@@ -141,11 +162,13 @@ def main():
             pool_blocks=args.pool_blocks or None,
             prefill_chunk=args.prefill_chunk,
             prefix_sharing=not args.no_prefix_sharing,
+            policy=args.policy,
             tracer=tracer,
             runlog=runlog,
         )
         requests = build_requests(cfg, args.requests,
-                                  max_new=args.max_new, seed=args.seed)
+                                  max_new=args.max_new, seed=args.seed,
+                                  tenants=args.tenants)
         results = serve_trace(engine, requests, args.ramp)
     if tracer is not None:
         print(f"trace: {tracer.save(args.trace)}")
@@ -155,6 +178,8 @@ def main():
 
     stats = engine.stats
     total = sum(r.steps for r in results)
+    print(f"policy: {args.policy}"
+          + (f" ({args.tenants} tenants)" if args.tenants else ""))
     print(f"served {len(results)} requests, {total} tokens "
           f"({stats.tokens_per_sec:.1f} tok/s windowed, "
           f"{stats.steps} decode steps, {stats.slot_steps} decoded lanes)")

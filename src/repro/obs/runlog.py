@@ -54,6 +54,9 @@ EVENTS = {
     "serve_admit": ("rid", "prompt_len", "budget"),
     "serve_retire": ("rid", "pos"),
     "serve_window": ("step", "tokens", "tokens_per_sec", "live"),
+    # a ServePolicy decision the engine actually applied (serve/policy.py):
+    # reordered admission, a slot-budget cap, or a shrink-patience change
+    "serve_policy": ("step", "reason"),
 }
 
 

@@ -9,12 +9,35 @@ fixed-size blocks with chain-hashed copy-on-write prefix sharing, and an
 optional ``MeshLadder`` that co-adapts the device footprint with the live
 decode batch — reshard via ``elastic.reshard.place`` for params and
 ``dist.sharding.cache_pspecs`` for the KV/SSM cache and the block pool.
-``ServeStats`` mirrors ``EngineStats``.
+``ServePolicy`` (policy.py) is the serve-side mirror of
+``adapt.AdaptationPolicy``: at every step boundary the engine observes
+``ServeSignals`` (queue depth/age, live load, windowed tokens/s, pool
+headroom) and the policy's ``ServeDecision`` sets admission order, slot
+budget, and shrink patience — ``FifoPolicy`` (default), ``PriorityPolicy``,
+``FairSharePolicy``.  ``ServeStats`` mirrors ``EngineStats``.
 """
 
 from repro.serve.blocks import BlockPool, PoolExhausted, chain_keys
 from repro.serve.engine import ServeEngine, ServeStats, padded_prompt_len
-from repro.serve.scheduler import Admission, Request, Result, Scheduler
+from repro.serve.policy import (
+    POLICIES,
+    FairSharePolicy,
+    FifoPolicy,
+    PriorityPolicy,
+    QueuedRequest,
+    ServeDecision,
+    ServePolicy,
+    ServeSignals,
+    make_serve_policy,
+)
+from repro.serve.scheduler import (
+    FREE_RID,
+    Admission,
+    Request,
+    Result,
+    Scheduler,
+    slots_for,
+)
 
 __all__ = [
     "ServeEngine",
@@ -27,4 +50,15 @@ __all__ = [
     "PoolExhausted",
     "chain_keys",
     "padded_prompt_len",
+    "slots_for",
+    "FREE_RID",
+    "ServePolicy",
+    "ServeSignals",
+    "ServeDecision",
+    "QueuedRequest",
+    "FifoPolicy",
+    "PriorityPolicy",
+    "FairSharePolicy",
+    "make_serve_policy",
+    "POLICIES",
 ]

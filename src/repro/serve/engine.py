@@ -16,6 +16,14 @@ Pieces:
     EOS/max-token retirement.  Admission is gated by the block pool's
     reservation check (worst-case blocks are promised up front, so a live
     request can never strand mid-decode on an exhausted pool).
+  * ``ServePolicy`` (serve/policy.py) — the serve-side mirror of
+    ``adapt.AdaptationPolicy``: at every step boundary (retire -> policy
+    observe -> resize -> admit) the engine snapshots ``ServeSignals``
+    (queue depth + per-request age, live/pending, windowed tokens/s, pool
+    headroom) and the policy's ``ServeDecision`` sets the admission order,
+    caps the slot budget, and tunes the shrink patience.  ``FifoPolicy``
+    (the default) reproduces the pre-hook engine token-for-token; applied
+    decisions mirror into ``serve_policy`` run-log events.
   * ``BlockPool`` (serve/blocks.py) — host accounting for the device pool:
     free list, refcounts, reservations, chain-hashed prefix registry with
     copy-on-write, LRU-evictable cached prefixes.  The device side is
@@ -74,8 +82,16 @@ from repro.models import transformer as tf
 from repro.obs import metrics as metrics_lib
 from repro.obs import runlog as runlog_lib
 from repro.obs import trace as trace_lib
+from repro.adapt.signals import Clock
 from repro.serve.blocks import BlockPool, chain_keys
-from repro.serve.scheduler import Admission, Request, Result, Scheduler
+from repro.serve.policy import (
+    FifoPolicy,
+    QueuedRequest,
+    ServePolicy,
+    ServeSignals,
+    make_serve_policy,
+)
+from repro.serve.scheduler import Admission, Request, Result, Scheduler, slots_for
 
 PyTree = Any
 
@@ -240,6 +256,7 @@ class ServeEngine:
         prefill_chunk: int = 0,
         prefix_sharing: bool = True,
         attn_impl: str | None = None,
+        policy: ServePolicy | str | None = None,
         tracer=None,
         runlog=None,
         obs_window: int = 16,
@@ -292,6 +309,16 @@ class ServeEngine:
         # back, paying a resize+reshard both ways.
         self.shrink_patience = int(shrink_patience)
         self._shrink_streak = 0
+        # -- the adaptation policy hook (serve/policy.py) -------------------
+        # observe -> decide at every boundary, mirroring the train side's
+        # adapt.AdaptationPolicy; FifoPolicy is provably the pre-hook engine
+        if policy is None:
+            policy = FifoPolicy()
+        elif isinstance(policy, str):
+            policy = make_serve_policy(policy)
+        self.policy = policy
+        self._slot_budget: int | None = None  # persists until a decision moves it
+        self._adm_order: list[int] | None = None  # this boundary's ordering
         self._sample = self._sampler_fn()
         self._exes: dict[tuple, Any] = {}
         # -- the paged pool -------------------------------------------------
@@ -660,6 +687,82 @@ class ServeEngine:
         if rate is not None:
             self.stats.tokens_per_sec = rate
 
+    # -- the policy boundary -------------------------------------------------
+    def _signals(self) -> ServeSignals:
+        """Snapshot the queue/slot/pool state for ``policy.observe`` (host
+        state only — zero device transfers)."""
+        sch = self.sched
+        now = sch.clock()
+        return ServeSignals(
+            queue_depth=sch.pending,
+            live=sch.live,
+            capacity=sch.capacity,
+            tokens_per_sec=self._thru.rate(now=now),
+            free_blocks=self.pool.free,
+            reserved_blocks=self.pool.reserved,
+            queued=tuple(
+                QueuedRequest(rid=rid, tenant=req.tenant,
+                              priority=req.priority,
+                              age=max(now - t, 0.0),
+                              prompt_len=len(req.prompt))
+                for rid, req, t in sch.queued()
+            ),
+            step=self.stats.steps,
+        )
+
+    def _observe_policy(self) -> None:
+        """The boundary's policy phase (retire -> OBSERVE -> resize ->
+        admit): build signals, let the policy decide, and apply — the
+        admission ordering for this boundary, the persistent slot-budget
+        cap, and the shrink patience.  Applied decisions that change
+        anything mirror into a ``serve_policy`` run-log event; an ordering
+        equal to FIFO is the identity and takes the legacy admit path."""
+        self._adm_order = None
+        sig = self._signals()
+        clock = Clock(epoch=0, step=self.stats.steps, boundary="tick")
+        if self.tracer.enabled:
+            with self.tracer.span("observe", scope="serve",
+                                  step_num=self.stats.steps):
+                d = self.policy.observe(sig, clock)
+        else:
+            d = self.policy.observe(sig, clock)
+        if d is None:
+            return
+        reordered = False
+        if d.order is not None:
+            order = tuple(d.order)
+            if order != tuple(q.rid for q in sig.queued):
+                self._adm_order = list(order)
+                reordered = True
+        changed = reordered
+        if d.slot_budget is not None and int(d.slot_budget) != self._slot_budget:
+            self._slot_budget = int(d.slot_budget)
+            changed = True
+        if (d.shrink_patience is not None
+                and int(d.shrink_patience) != self.shrink_patience):
+            self.shrink_patience = int(d.shrink_patience)
+            changed = True
+        if changed and self.runlog.enabled:
+            self.runlog.emit(
+                "serve_policy", step=self.stats.steps,
+                reason=d.reason or type(self.policy).__name__,
+                reordered=reordered, slot_budget=self._slot_budget,
+                shrink_patience=self.shrink_patience,
+                queue_depth=sig.queue_depth,
+            )
+
+    def _target_slots(self) -> int:
+        """The scheduler's pow2 slot target, clamped under the policy's
+        slot budget.  The effective budget is at least ``max(live, 1)``:
+        a budget can throttle admission but never evicts live requests or
+        stalls the drain."""
+        target = self.sched.target_slots()
+        if self._slot_budget is None:
+            return target
+        cap = max(self._slot_budget, self.sched.live, 1)
+        need = min(self.sched.live + self.sched.pending, cap)
+        return min(target, slots_for(need, self.sched.granule, self.max_slots))
+
     # -- chunked prefill -----------------------------------------------------
     def _run_chunk(self, job: _PrefillJob) -> None:
         """Advance one prompt by one block-aligned chunk.  The prior-context
@@ -740,7 +843,7 @@ class ServeEngine:
         for job in self._jobs:
             job.stepped = False
         while True:
-            adms = self.sched.admit(gate=self._gate)
+            adms = self.sched.admit(gate=self._gate, order=self._adm_order)
             for adm in adms:
                 self._begin(adm)
             pending = [j for j in self._jobs if not j.stepped]
@@ -801,15 +904,17 @@ class ServeEngine:
     # -- the serving step ----------------------------------------------------
     def step(self) -> bool:
         """One boundary (retire happened in the previous step's records ->
-        resize -> reshard -> admit/prefill-chunks) plus one decode step over
-        the slot table.  Returns False once fully drained."""
+        policy observe -> resize -> reshard -> admit/prefill-chunks) plus
+        one decode step over the slot table.  Returns False once fully
+        drained."""
         sch = self.sched
         if not sch.has_work:
             # a drained engine starts the next trace fresh: a stale shrink
             # streak would defeat shrink_patience on its first dip
             self._shrink_streak = 0
             return False
-        target = sch.target_slots()
+        self._observe_policy()
+        target = self._target_slots()
         if 0 < target < self._bucket:
             self._shrink_streak += 1
             if self._shrink_streak <= self.shrink_patience:

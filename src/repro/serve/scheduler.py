@@ -6,32 +6,50 @@ lifecycle; the :class:`~repro.serve.engine.ServeEngine` owns the device
 mirror (the batched KV/SSM cache) and drives the scheduler in boundary
 phases between decode steps:
 
-  1. retirement happened during the previous step's ``record`` calls;
-  2. ``target_slots()`` -> ``resize(n)``: the slot capacity tracks the
+  1. retire — retirement happened during the previous step's ``record``
+     calls (a slot frees the moment its request hits EOS or its budget);
+  2. policy observe — the engine snapshots the queue/slot/pool state into
+     ``serve.policy.ServeSignals`` and asks its ``ServePolicy`` for a
+     decision: the admission ORDER over the queue, a cap on the slot
+     budget, and the shrink patience.  The default ``FifoPolicy`` decides
+     exactly what steps 3-4 would do on their own;
+  3. ``target_slots()`` -> ``resize(n)``: the slot capacity tracks the
      runnable request count on the pow2 lattice (``core/batch_policy.bucket``
-     — the serving analogue of the train-side compile buckets), and a shrink
-     compacts live slots into the low indices (``resize`` returns the gather
-     map the engine applies to the cache rows);
-  3. ``admit()``: free slots are refilled FIFO from the queue — a mid-batch
-     EOS no longer wastes its lane until the whole chunk drains;
-  4. one decode step for the whole slot table; ``record(slot, token)``
+     — the serving analogue of the train-side compile buckets), clamped
+     under the policy's slot budget, and a shrink compacts live slots into
+     the low indices (``resize`` returns the gather map the engine applies
+     to the cache rows);
+  4. ``admit(order=...)``: free slots are refilled from the queue in the
+     policy's order (FIFO by default) — a mid-batch EOS no longer wastes
+     its lane until the whole chunk drains.  A pick vetoed by the caller's
+     ``gate`` (the engine's block-pool reservation check) STOPS the pass,
+     whatever the ordering, so reservation gating stays starvation-free;
+  5. one decode step for the whole slot table; ``record(slot, token)``
      appends each live slot's token and retires the slot the moment its
      request hits EOS or its token budget.
 
-Invariants (property-tested in tests/test_serve_sched.py): a slot is never
-double-assigned, no submitted request is ever dropped, every request retires
-at exactly its EOS/max-token step, and every capacity the scheduler asks for
-lies on the pow2 slot lattice.
+Invariants (property-tested in tests/test_serve_sched.py and
+tests/test_serve_policy.py): a slot is never double-assigned, no submitted
+request is ever dropped — under ANY admission ordering — every request
+retires at exactly its EOS/max-token step, and every capacity the scheduler
+asks for lies on the pow2 slot lattice.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
+from typing import Callable, Iterable
 
 import numpy as np
 
 from repro.core.batch_policy import bucket
+
+#: ``slot_rids()`` sentinel for a free lane — a value no real request id can
+#: take (rids count up from 0), so a free lane can never alias a live
+#: request's per-rid sampling-key material in the decode program
+FREE_RID = -1
 
 
 @dataclasses.dataclass
@@ -39,6 +57,12 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
     eos_id: int | None = None
+    # optional policy metadata (serve/policy.py): share class, priority
+    # class (higher admits sooner under PriorityPolicy), and an explicit
+    # submission timestamp (defaults to the scheduler clock at submit)
+    tenant: str | None = None
+    priority: int = 0
+    submit_time: float | None = None
 
 
 @dataclasses.dataclass
@@ -73,17 +97,22 @@ def slots_for(need: int, granule: int, max_slots: int) -> int:
 class Scheduler:
     """Admission queue + slot table for continuous-batching decode."""
 
-    def __init__(self, max_slots: int, *, granule: int = 1):
+    def __init__(self, max_slots: int, *, granule: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
         if granule < 1 or max_slots < granule:
             raise ValueError(
                 f"need max_slots >= granule >= 1, got {max_slots}, {granule}"
             )
         self.max_slots = int(max_slots)
         self.granule = int(granule)
+        #: injectable wall clock — queue ages are unit-testable without
+        #: sleeping (mirrors adapt.signals.ThroughputWindow)
+        self.clock = clock
         self._queue: collections.deque[int] = collections.deque()
         self._reqs: dict[int, Request] = {}
         self._budget: dict[int, int] = {}
         self._tokens: dict[int, list[int]] = {}
+        self._submit_t: dict[int, float] = {}
         self._slots: list[int | None] = []
         self._done: dict[int, Result] = {}
         self._next_rid = 0
@@ -102,6 +131,10 @@ class Scheduler:
         self._reqs[rid] = request
         self._budget[rid] = budget
         self._tokens[rid] = []
+        self._submit_t[rid] = (
+            self.clock() if request.submit_time is None
+            else float(request.submit_time)
+        )
         self._queue.append(rid)
         self.submitted += 1
         return rid
@@ -123,21 +156,42 @@ class Scheduler:
         self._slots = [rid for _, rid in live] + [None] * (n - len(live))
         return idx
 
-    def admit(self, gate=None) -> list[Admission]:
-        """Fill free slots FIFO from the queue (one pass; callers loop when
-        an admission retires instantly and frees its slot again).
+    def admit(self, gate=None,
+              order: Iterable[int] | None = None) -> list[Admission]:
+        """Fill free slots from the queue (one pass; callers loop when an
+        admission retires instantly and frees its slot again).
+
+        ``order`` is a policy-supplied admission ordering over the queued
+        rids (``None`` = FIFO).  Rids in the ordering that are no longer
+        queued are skipped (admitted in an earlier pass this boundary);
+        queued rids the ordering omits follow at the end in FIFO order — an
+        ordering can promote or rank a subset but can never DROP a request.
 
         ``gate(rid, request) -> bool`` vetoes admissions the caller cannot
         resource yet (the engine's block-pool reservation check).  A gated
-        head-of-queue STOPS the pass — admission stays strictly FIFO, so a
-        large request is never starved by smaller ones slipping past it.
+        pick STOPS the pass — admission stays strict in the chosen order,
+        so a large request is never starved by smaller ones slipping past
+        it, whatever the policy's ordering.
         """
+        if order is None:
+            picks = list(self._queue)
+        else:
+            queued = set(self._queue)
+            picks, seen = [], set()
+            for rid in order:
+                if rid in queued and rid not in seen:
+                    picks.append(rid)
+                    seen.add(rid)
+            picks.extend(rid for rid in self._queue if rid not in seen)
         out: list[Admission] = []
+        k = 0
         for i, rid in enumerate(self._slots):
-            if rid is None and self._queue:
-                if gate is not None and not gate(self._queue[0], self._reqs[self._queue[0]]):
+            if rid is None and k < len(picks):
+                nrid = picks[k]
+                if gate is not None and not gate(nrid, self._reqs[nrid]):
                     break
-                nrid = self._queue.popleft()
+                k += 1
+                self._queue.remove(nrid)
                 self._slots[i] = nrid
                 out.append(Admission(slot=i, rid=nrid, request=self._reqs[nrid]))
         return out
@@ -195,6 +249,13 @@ class Scheduler:
             if rid is not None and self._tokens[rid]
         ]
 
+    def queued(self) -> list[tuple[int, Request, float]]:
+        """``[(rid, request, submit_time)]`` for every queued (unadmitted)
+        request, in FIFO order — the policy-facing queue view (ages come
+        from ``clock() - submit_time``)."""
+        return [(rid, self._reqs[rid], self._submit_t[rid])
+                for rid in self._queue]
+
     def slot_of(self, rid: int) -> int:
         """The slot currently holding ``rid`` (raises if it is not resident)."""
         for i, r in enumerate(self._slots):
@@ -212,9 +273,12 @@ class Scheduler:
         return out
 
     def slot_rids(self) -> np.ndarray:
-        """(capacity,) int32 request ids per slot (0 for free lanes) — the
-        per-slot sampling-key material fed into the decode program."""
-        out = np.zeros(len(self._slots), np.int32)
+        """(capacity,) int32 request ids per slot — the per-slot
+        sampling-key material fed into the decode program.  Free lanes carry
+        :data:`FREE_RID` (-1), which no real request id can take: the old 0
+        sentinel collided with the FIRST request's rid, feeding a free lane
+        the same fold_in key material as request 0."""
+        out = np.full(len(self._slots), FREE_RID, np.int32)
         for i, rid in enumerate(self._slots):
             if rid is not None:
                 out[i] = rid

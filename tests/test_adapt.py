@@ -882,8 +882,11 @@ class TestThroughputWindow:
 
         w = ThroughputWindow(window_s=10.0, clock=lambda: 0.0)
         assert w.rate(now=0.0) is None  # nothing measured yet
+        # a zero-span burst has no measurable elapsed time: charge the full
+        # window — a finite conservative lower bound, not None/inf (the old
+        # code answered None, as if the burst never happened)
         w.add(5, now=0.0)
-        assert w.rate(now=0.0) is None  # zero span: rate undefined, not inf
+        assert w.rate(now=0.0) == pytest.approx(0.5)
         w.add(5, now=5.0)
         # 10 events over the 5 s elapsed so far — NOT diluted over the
         # still-unfilled 10 s window
@@ -895,12 +898,23 @@ class TestThroughputWindow:
         w = ThroughputWindow(window_s=10.0, clock=lambda: 0.0)
         w.add(5, now=0.0)
         w.add(5, now=5.0)
-        # at t=10 the t=0 burst is outside the trailing (0, 10] window: the
-        # global average would say 1.0/s, the window says 0.5/s
-        assert w.rate(now=10.0) == pytest.approx(0.5)
+        # the trailing window is the CLOSED interval [0, 10]: the sample
+        # exactly window_s old still counts — the denominator charges those
+        # 10 seconds, so dropping the sample (the old <=) deflated the rate
+        assert w.rate(now=10.0) == pytest.approx(1.0)
         # a straggler stall shows up as a collapsing rate
         assert w.rate(now=14.9) == pytest.approx(0.5)
         assert w.rate(now=20.0) == pytest.approx(0.0)
+
+    def test_window_edge_is_inclusive(self):
+        from repro.adapt import ThroughputWindow
+
+        w = ThroughputWindow(window_s=4.0, clock=lambda: 0.0)
+        w.add(8, now=0.0)
+        # exactly window_s old: inside the closed window
+        assert w.rate(now=4.0) == pytest.approx(2.0)
+        # a hair past: evicted
+        assert w.rate(now=4.001) == pytest.approx(0.0)
 
     def test_counts_accumulate_within_the_window(self):
         from repro.adapt import ThroughputWindow
@@ -908,8 +922,8 @@ class TestThroughputWindow:
         w = ThroughputWindow(window_s=4.0, clock=lambda: 0.0)
         for t in range(8):
             w.add(2, now=float(t))
-        # window (3, 7]: samples at t=4,5,6,7 -> 8 events / 4 s
-        assert w.rate(now=7.0) == pytest.approx(2.0)
+        # closed window [3, 7]: samples at t=3,4,5,6,7 -> 10 events / 4 s
+        assert w.rate(now=7.0) == pytest.approx(2.5)
 
     def test_bad_window_raises(self):
         from repro.adapt import ThroughputWindow

@@ -32,6 +32,10 @@ def test_bench_serve_smoke(tmp_path):
     names = [name for name, _, _ in rows]
     assert "serve_elastic_ladder" in names and "serve_fixed_full_mesh" in names
     assert "serve_paged_prefix_sharing" in names
+    assert "serve_policy_fairness" in names
+    # the throughput arms record which ServePolicy drove them
+    assert record["fixed_full_mesh"]["policy"] == "fifo"
+    assert record["elastic"]["policy"] == "fifo"
     # the paged section: pool footprint + prefix-sharing schema
     pg = record["paged"]
     for key in ("block_size", "pool_blocks", "peak_blocks",
@@ -49,3 +53,19 @@ def test_bench_serve_smoke(tmp_path):
     assert sh["shared_prefill_hits"] > 0 and ns["shared_prefill_hits"] == 0
     assert sh["compiles_in_measured_pass"] == 0
     assert sh["tokens_per_sec"] > 0 and ns["tokens_per_sec"] > 0
+    # the policy section: per-tenant queue-wait percentiles per ServePolicy
+    pol = record["policy"]
+    assert pol["workload"]["task"] == "two-tenant-burst"
+    for name in ("fifo", "priority", "fair"):
+        for tenant in ("big", "small"):
+            arm = pol[name][tenant]
+            for key in ("n", "p50_wait_steps", "p95_wait_steps",
+                        "mean_wait_steps"):
+                assert key in arm, (name, tenant, key)
+            assert arm["n"] > 0
+            assert arm["p50_wait_steps"] <= arm["p95_wait_steps"]
+    # the acceptance invariant: fair share strictly cuts the minority
+    # tenant's tail wait vs queueing behind the majority burst
+    assert (pol["fair"]["small"]["p95_wait_steps"]
+            < pol["fifo"]["small"]["p95_wait_steps"])
+    assert 0 <= pol["fair_vs_fifo_minority_p95"] < 1

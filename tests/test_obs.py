@@ -459,6 +459,8 @@ class TestServeObs:
         assert kinds.count("serve_admit") == 3
         assert kinds.count("serve_retire") == 3
         assert kinds.count("serve_window") >= 1
+        # the default FifoPolicy decides the identity: nothing to mirror
+        assert kinds.count("serve_policy") == 0
         compiles = [e for e in evs if e["kind"] == "compile"]
         assert compiles and all(e["scope"] == "serve" for e in compiles)
         assert {c["exe_kind"] for c in compiles} >= {"decode", "prefill"}
@@ -474,6 +476,43 @@ class TestServeObs:
         assert st.namespace.startswith("serve.engine.")
         for f in (*st._COUNTERS, *st._GAUGES):
             assert snap[f"{st.namespace}.{f}"] == getattr(st, f), f
+
+    def test_serve_policy_event(self, tmp_path):
+        """An applied ServePolicy decision mirrors into the typed
+        ``serve_policy`` run-log event, and only when it changed something
+        (a reorder here: 6 inverted-priority requests into 2 slots)."""
+        cfg = ModelConfig(
+            name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+            num_kv_heads=2, d_ff=64, vocab_size=61, pattern=("attn",),
+            param_dtype="float32", compute_dtype="float32", xent_chunk=8,
+            remat=False,
+        )
+        params = tf.init_params(cfg, jax.random.key(0))
+        rng = np.random.default_rng(8)
+
+        def reqs():
+            return [Request(prompt=rng.integers(1, 61, size=4)
+                            .astype(np.int32), max_new_tokens=4,
+                            tenant=f"t{i % 2}", priority=i)
+                    for i in range(6)]
+
+        log = RunLog(str(tmp_path))
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                          prompt_granule=8, policy="priority", runlog=log)
+        eng.generate(reqs())
+        log.close()
+        evs = read_runlog(str(tmp_path))
+        pol = [e for e in evs if e["kind"] == "serve_policy"]
+        assert pol  # ascending priorities vs FIFO: a genuine reorder
+        for e in pol:
+            assert e["reason"] == "priority"
+            assert e["step"] >= 0 and e["queue_depth"] > 0
+            # emitted ONLY when the decision changed something — here that
+            # can only be the reorder (no budget/patience in the decision)
+            assert e["reordered"] is True
+            assert e["slot_budget"] is None
+        # the monitor renders the decision stream as lifecycle lines
+        assert "policy    'priority'" in monitor.lifecycle(evs)
 
 
 # ---------------------------------------------------------------------------

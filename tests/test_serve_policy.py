@@ -1,0 +1,415 @@
+"""serve/policy.py — the ServePolicy observe/decide hook.
+
+Policy-level unit tests on synthetic ServeSignals (ordering semantics of
+fifo/priority/fair), scheduler-level property tests that NO admission
+ordering can drop or double-assign a request (and that the gated-head rule
+survives reordering), engine-level golden lanes (FifoPolicy — the default —
+is token-identical to the pre-hook engine against the re-prefill oracle,
+dense and paged; priority/fair reorder admissions without perturbing any
+request's tokens), the slot-budget / shrink-patience decision plumbing, and
+the FREE_RID free-lane sentinel regression.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.adapt.signals import Clock
+from repro.serve import (
+    FREE_RID,
+    FairSharePolicy,
+    FifoPolicy,
+    PriorityPolicy,
+    QueuedRequest,
+    Request,
+    Scheduler,
+    ServeDecision,
+    ServeEngine,
+    ServePolicy,
+    ServeSignals,
+    make_serve_policy,
+)
+
+# the PR 6 golden lane: same config/params/trace/oracle as the elastic and
+# paged golden tests, so "FifoPolicy reproduces the pre-hook engine" is
+# pinned against the exact trace those PRs pinned
+from test_serve_elastic import (  # noqa: F401
+    CFG,
+    GRANULE,
+    MAX_SEQ,
+    PARAMS,
+    _oracle,
+    _requests,
+    _tokens,
+)
+
+CLOCK = Clock(epoch=0, step=0, boundary="tick")
+
+
+def _sig(entries, **kw):
+    """ServeSignals with a queue of (rid, tenant, priority) entries."""
+    queued = tuple(
+        QueuedRequest(rid=r, tenant=t, priority=p, age=0.0, prompt_len=4)
+        for r, t, p in entries
+    )
+    return ServeSignals(queue_depth=len(queued), queued=queued, **kw)
+
+
+# ---------------------------------------------------------------------------
+# policy ordering semantics (pure, no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_and_protocol():
+    for name in ("fifo", "priority", "fair"):
+        assert isinstance(make_serve_policy(name), ServePolicy)
+    with pytest.raises(ValueError, match="unknown serve policy"):
+        make_serve_policy("lifo")
+    with pytest.raises(ValueError, match="quantum"):
+        FairSharePolicy(quantum=0)
+
+
+def test_fifo_returns_queue_order_and_none_on_empty():
+    p = FifoPolicy()
+    assert p.observe(_sig([]), CLOCK) is None
+    d = p.observe(_sig([(3, None, 0), (5, None, 0), (4, None, 0)]), CLOCK)
+    assert d.order == (3, 5, 4)  # the identity: queue order itself
+    assert d.slot_budget is None and d.shrink_patience is None
+    assert d.reason == "fifo"
+
+
+def test_priority_sorts_high_first_stable_within_class():
+    p = PriorityPolicy()
+    d = p.observe(
+        _sig([(0, None, 0), (1, None, 2), (2, None, 1),
+              (3, None, 2), (4, None, 0)]),
+        CLOCK,
+    )
+    # class 2 first (FIFO within: 1 before 3), then 1, then 0 (0 before 4)
+    assert d.order == (1, 3, 2, 0, 4)
+    assert p.observe(_sig([]), CLOCK) is None
+
+
+def test_fair_share_interleaves_a_burst():
+    p = FairSharePolicy()
+    # tenant "big" bursts rids 0..5; "small" queues rids 6,7 behind it
+    d = p.observe(
+        _sig([(r, "big", 0) for r in range(6)]
+             + [(6, "small", 0), (7, "small", 0)]),
+        CLOCK,
+    )
+    # deficit round-robin: tenants alternate, FIFO within a tenant
+    assert d.order == (0, 6, 1, 7, 2, 3, 4, 5)
+    assert d.reason == "fair"
+
+
+def test_fair_share_tracks_admissions_across_observations():
+    p = FairSharePolicy()
+    p.observe(_sig([(0, "big", 0), (1, "big", 0), (2, "small", 0)]), CLOCK)
+    # rid 0 left the queue (admitted): tenant big's virtual time advances,
+    # so small's head now ranks ahead of big's
+    d = p.observe(_sig([(1, "big", 0), (2, "small", 0)]), CLOCK)
+    assert d.order == (2, 1)
+
+
+def test_fair_share_equal_traffic_reduces_to_fifo():
+    p = FairSharePolicy()
+    d = p.observe(
+        _sig([(0, "a", 0), (1, "b", 0), (2, "a", 0), (3, "b", 0)]), CLOCK
+    )
+    assert d.order == (0, 1, 2, 3)  # ties break by arrival order
+
+
+def test_fair_share_quantum_batches_turns():
+    p = FairSharePolicy(quantum=2)
+    d = p.observe(
+        _sig([(0, "a", 0), (1, "a", 0), (2, "a", 0), (3, "b", 0)]), CLOCK
+    )
+    # quantum 2: a's first TWO requests share virtual time 0 with b's first
+    assert d.order == (0, 1, 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: no ordering can drop or double-assign (the no-drop invariant)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_admit_arbitrary_orderings_never_drop_or_double_assign(seed):
+    """Adversarial orderings — permuted subsets, stale rids, duplicates,
+    unknown rids — against random arrival traces: every request still
+    retires at exactly its token budget, every slot assignment is unique,
+    and each request is admitted exactly once."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 12))
+    max_slots = int(rng.integers(1, 6))
+    budgets = [int(rng.integers(1, 6)) for _ in range(n)]
+    arrivals = sorted(int(rng.integers(0, 8)) for _ in range(n))
+
+    sched = Scheduler(max_slots)
+    admissions: list[int] = []
+    submitted = 0
+    for t in range(10_000):
+        while submitted < n and arrivals[submitted] <= t:
+            sched.submit(Request(prompt=np.zeros(2, np.int32),
+                                 max_new_tokens=budgets[submitted]))
+            submitted += 1
+        if submitted == n and not sched.has_work:
+            break
+        sched.resize(sched.target_slots())
+        # an adversarial ordering: shuffled queued subset + junk
+        queued = [rid for rid, _, _ in sched.queued()]
+        rng.shuffle(queued)
+        order = queued[: int(rng.integers(0, len(queued) + 1))]
+        order += [999 + int(rng.integers(0, 5))]  # never-submitted rid
+        order += admissions[-2:]  # stale rids (already admitted)
+        order += order[:1]  # a duplicate
+        adms = sched.admit(order=order)
+        assert len({a.slot for a in adms}) == len(adms)
+        assert len({a.rid for a in adms}) == len(adms)
+        for a in adms:
+            assert a.rid not in admissions  # admitted at most once, ever
+            admissions.append(a.rid)
+        for slot, rid in sched.live_slots():
+            sched.record(slot, 11)
+    else:
+        pytest.fail("trace did not drain")
+
+    assert sorted(admissions) == list(range(n))  # nobody dropped
+    assert sched.retired == n
+    for rid in range(n):
+        assert sched.result(rid).steps == budgets[rid]
+
+
+def test_gated_head_stops_the_pass_under_any_ordering():
+    """A gate veto on the ORDERED head stops the whole admission pass — a
+    policy promoting a large request cannot have smaller ones slip past it
+    (reservation gating stays starvation-free)."""
+    sched = Scheduler(4)
+    rids = [sched.submit(Request(prompt=np.zeros(2, np.int32),
+                                 max_new_tokens=2)) for _ in range(3)]
+    sched.resize(4)
+    gate = lambda rid, req: rid != rids[2]  # noqa: E731
+    adms = sched.admit(gate=gate, order=[rids[2], rids[0], rids[1]])
+    assert adms == []  # the gated head blocked everyone behind it
+    assert sched.pending == 3  # nothing silently dropped
+    # FIFO order under the same gate admits the two ungated heads
+    adms = sched.admit(gate=gate)
+    assert [a.rid for a in adms] == [rids[0], rids[1]]
+    assert sched.pending == 1
+
+
+# ---------------------------------------------------------------------------
+# engine golden lanes: fifo is the pre-hook engine; reordering never
+# perturbs a request's tokens
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    reqs = _requests()
+    return reqs, [_oracle(CFG, PARAMS, r) for r in reqs]
+
+
+def test_fifo_default_matches_oracle_dense_and_paged(golden):
+    """The tentpole acceptance lane: the default policy (and policy='fifo'
+    explicitly) reproduces the PR 6 golden trace token-for-token, on the
+    dense path and on the paged/chunked path."""
+    reqs, expected = golden
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE)
+    assert isinstance(eng.policy, FifoPolicy)  # the default
+    assert _tokens(eng.generate(reqs)) == expected
+
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, policy="fifo")
+    assert _tokens(eng.generate(_requests())) == expected
+
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, policy="fifo",
+                      block_size=8, prefill_chunk=8)
+    assert _tokens(eng.generate(_requests())) == expected
+
+
+def test_reordering_policies_never_perturb_tokens(golden):
+    """priority/fair change WHEN a request is admitted, never WHAT it
+    decodes: per-slot timelines are independent, so every request still
+    matches the single-request oracle."""
+    _, expected = golden
+    for policy in ("priority", "fair"):
+        reqs = _requests()
+        for i, r in enumerate(reqs):  # adversarial metadata: reverse classes
+            r.tenant = f"t{i % 2}"
+            r.priority = len(reqs) - i
+        eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                          prompt_granule=GRANULE, policy=policy)
+        assert _tokens(eng.generate(reqs)) == expected, policy
+        assert eng.stats.retired == len(reqs)
+
+
+def test_priority_admits_high_class_first():
+    rng = np.random.default_rng(12)
+    mk = lambda pr: Request(  # noqa: E731
+        prompt=rng.integers(1, 61, size=4).astype(np.int32),
+        max_new_tokens=3, priority=pr,
+    )
+    eng = ServeEngine(CFG, PARAMS, max_slots=2, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, policy="priority")
+    # 6 requests into 2 slots: rids 4,5 carry the high class
+    rids = [eng.submit(mk(pr)) for pr in (0, 0, 0, 0, 9, 9)]
+    order = []
+    seen = set(rids)
+    while eng.step():
+        queued = {rid for rid, _, _ in eng.sched.queued()}
+        for rid in rids:
+            if rid in seen and rid not in queued:
+                order.append(rid)
+                seen.discard(rid)
+    # everything queued at once into 2 slots: the high class goes first
+    assert set(order[:2]) == {rids[4], rids[5]}
+    assert eng.sched.retired == 6
+
+
+# ---------------------------------------------------------------------------
+# slot budget / shrink patience decisions
+# ---------------------------------------------------------------------------
+
+
+class _Throttle:
+    """Admit-one-at-a-time: cap the slot table at 1 from the first boundary."""
+
+    def observe(self, signals, clock):
+        return ServeDecision(slot_budget=1, reason="throttle")
+
+
+class _OneShot:
+    """Decide once, then go silent — pins that applied budgets PERSIST."""
+
+    def __init__(self, **fields):
+        self._fields = fields
+
+    def observe(self, signals, clock):
+        fields, self._fields = self._fields, {}
+        return ServeDecision(**fields) if fields else None
+
+
+def test_slot_budget_caps_capacity_without_stalling(golden):
+    reqs, expected = golden
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, policy=_Throttle())
+    for r in reqs:
+        eng.submit(r)
+    while eng.step():
+        assert eng.sched.capacity <= 1  # the budget held at every boundary
+    assert eng.sched.retired == len(reqs)  # a budget never stalls the drain
+    assert max(eng.stats.buckets) == 1
+    # serialized admission is still token-identical (slot independence)
+    assert _tokens([eng.result(i) for i in range(len(reqs))]) == expected
+
+
+def test_slot_budget_persists_until_changed():
+    rng = np.random.default_rng(13)
+    reqs = [Request(prompt=rng.integers(1, 61, size=4).astype(np.int32),
+                    max_new_tokens=4) for _ in range(6)]
+    eng = ServeEngine(CFG, PARAMS, max_slots=8, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE,
+                      policy=_OneShot(slot_budget=2, reason="once"))
+    for r in reqs:
+        eng.submit(r)
+    while eng.step():
+        assert eng.sched.capacity <= 2  # sticky across silent boundaries
+    assert eng.sched.retired == 6
+
+
+class _Deferred:
+    """Silent for ``after`` boundaries, then one decision — lets requests
+    go live BEFORE the budget lands."""
+
+    def __init__(self, after, **fields):
+        self.after = after
+        self._fields = fields
+
+    def observe(self, signals, clock):
+        if self.after > 0:
+            self.after -= 1
+            return None
+        fields, self._fields = self._fields, {}
+        return ServeDecision(**fields) if fields else None
+
+
+def test_slot_budget_never_evicts_live_requests():
+    """A budget landing BELOW the live count clamps to the live count — it
+    throttles future admission but cannot shrink under running requests or
+    stall the drain."""
+    rng = np.random.default_rng(14)
+    reqs = [Request(prompt=rng.integers(1, 61, size=4).astype(np.int32),
+                    max_new_tokens=6) for _ in range(4)]
+    eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE,
+                      policy=_Deferred(1, slot_budget=1, reason="squeeze"))
+    for r in reqs:
+        eng.submit(r)
+    eng.step()  # boundary 1 (policy silent): all 4 go live
+    assert eng.sched.live == 4
+    while eng.step():  # boundary 2 lands budget=1 under 4 live requests
+        assert eng.sched.capacity >= eng.sched.live
+    assert eng.sched.retired == 4
+    assert all(eng.result(i).steps == 6 for i in range(4))  # nobody evicted
+
+
+def test_shrink_patience_decision_applies():
+    eng = ServeEngine(CFG, PARAMS, max_slots=2, max_seq=MAX_SEQ,
+                      prompt_granule=GRANULE, shrink_patience=2,
+                      policy=_OneShot(shrink_patience=5, reason="damp"))
+    assert eng.shrink_patience == 2
+    eng.submit(Request(prompt=np.ones(4, np.int32), max_new_tokens=2))
+    eng.step()
+    assert eng.shrink_patience == 5  # the decision landed
+    eng.drain()
+    assert eng.shrink_patience == 5  # and persists
+
+
+# ---------------------------------------------------------------------------
+# the FREE_RID sentinel (satellite 1 regression)
+# ---------------------------------------------------------------------------
+
+
+def test_free_lanes_carry_sentinel_not_rid_zero():
+    sched = Scheduler(4)
+    rid = sched.submit(Request(prompt=np.zeros(2, np.int32), max_new_tokens=2))
+    sched.resize(2)
+    sched.admit()
+    assert rid == 0  # the collision case: the first request's rid IS 0
+    assert sched.slot_rids().tolist() == [0, FREE_RID]
+    assert FREE_RID == -1
+    assert sched.slot_rids().dtype == np.int32
+
+
+def test_live_lane_tokens_invariant_to_free_lane_count():
+    """Categorical decode with free lanes present (a retired sibling leaves
+    a vacancy that shrink_patience keeps alive) must emit the same tokens
+    as the same request decoding alone with no free lanes: a free lane's
+    sampling-key material can never alias a live request's."""
+    rng = np.random.default_rng(15)
+    prompt = rng.integers(1, 61, size=5).astype(np.int32)
+    sibling = rng.integers(1, 61, size=4).astype(np.int32)
+
+    def run(with_sibling):
+        eng = ServeEngine(CFG, PARAMS, max_slots=4, max_seq=MAX_SEQ,
+                          prompt_granule=GRANULE, sampler="categorical",
+                          temperature=0.7, seed=21, shrink_patience=100)
+        rid = eng.submit(Request(prompt=prompt, max_new_tokens=10))
+        free_seen = 0
+        if with_sibling:
+            eng.submit(Request(prompt=sibling, max_new_tokens=2))
+        while eng.step():
+            if eng.sched.live:  # free lanes co-resident with live decode
+                free_seen += eng.sched.capacity - eng.sched.live
+        return eng.result(rid).tokens.tolist(), free_seen
+
+    alone, free_alone = run(False)
+    shared, free_shared = run(True)
+    assert free_alone == 0  # capacity 1 throughout: no free lanes at all
+    assert free_shared > 0  # the sibling retired and left a live vacancy
+    assert shared == alone  # rid 0's stream untouched by the free lane

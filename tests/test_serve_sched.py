@@ -101,6 +101,32 @@ def test_slots_for_lattice():
     assert slots_for(7, 1, 6) == 4  # largest lattice point under a non-pow2 cap
 
 
+@settings(max_examples=200, deadline=None)
+@given(need=st.integers(min_value=0, max_value=64),
+       granule=st.integers(min_value=1, max_value=8),
+       max_slots=st.integers(min_value=1, max_value=48))
+def test_slots_for_properties(need, granule, max_slots):
+    """slots_for over the full domain — non-pow2 caps and need > cap
+    included: the result is on the granule*2^k lattice, covers
+    min(need, largest-lattice-point-under-cap), and never exceeds the cap.
+    (core.batch_policy.bucket can snap DOWN mid-lattice; the doubling loop
+    in slots_for must compensate, which is exactly what this pins.)"""
+    if max_slots < granule:
+        max_slots = granule
+    s = slots_for(need, granule, max_slots)
+    lattice = {granule * (1 << i) for i in range(12)}
+    cap = max(p for p in lattice if p <= max_slots)
+    if need <= 0:
+        assert s == 0
+        return
+    assert s in lattice
+    assert s <= cap
+    assert s >= min(need, cap)  # whatever fits under the cap gets a slot
+    # minimal: the next lattice point down would not cover the need
+    if s > granule:
+        assert s // 2 < min(need, cap)
+
+
 def test_resize_below_live_raises():
     sched = Scheduler(4)
     for _ in range(3):
